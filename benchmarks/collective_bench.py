@@ -1,0 +1,65 @@
+"""TPU-adaptation benchmark: grad-sync strategies compared on real wall time
+(small mesh on CPU devices) and on modeled link load.
+
+* wall time: train a reduced llama on an 8-way data mesh with each grad_sync
+  mode (auto / ring / canary / hierarchical analogue) — this actually runs
+  the ppermute tree schedules.
+* link load: the congestion oracle's analytic per-link byte model comparing
+  round-robin roots (paper baseline) vs balanced roots (beyond-paper).
+
+The production-mesh collective *bytes* comparison lives in the dry-run
+JSONs (repro.launch.dryrun --grad-sync ...) and EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.collective import CongestionOracle, round_robin_roots, tree_link_load
+
+from .common import emit
+
+
+def link_load_model() -> None:
+    axis = 16
+    blocks = 64
+    rr = round_robin_roots(blocks, axis)
+    load_rr = np.zeros(axis)
+    for r in rr:
+        load_rr += tree_link_load(r, axis)
+    oracle = CongestionOracle(axis_size=axis, num_blocks=blocks,
+                              policy="balanced")
+    bal = oracle.plan()
+    load_bal = np.zeros(axis)
+    for r in bal:
+        load_bal += tree_link_load(r, axis)
+    # and with an external hotspot (another tenant pinning links 0-3)
+    ext = np.zeros(axis)
+    ext[:4] = load_rr.max() * 0.5
+    oracle_hot = CongestionOracle(axis_size=axis, num_blocks=blocks,
+                                  policy="balanced", external_load=ext)
+    hot = oracle_hot.plan()
+    load_hot = np.zeros(axis) + ext
+    for r in hot:
+        load_hot += tree_link_load(r, axis)
+    load_rr_hot = ext.copy()
+    for r in rr:
+        load_rr_hot += tree_link_load(r, axis)
+    emit("collective/link_load/round_robin", 0.0,
+         f"max={load_rr.max():.0f};avg={load_rr.mean():.0f}")
+    emit("collective/link_load/balanced", 0.0,
+         f"max={load_bal.max():.0f};avg={load_bal.mean():.0f}")
+    emit("collective/link_load/hotspot_rr", 0.0,
+         f"max={load_rr_hot.max():.0f}")
+    emit("collective/link_load/hotspot_balanced", 0.0,
+         f"max={load_hot.max():.0f};"
+         f"gain={(load_rr_hot.max()-load_hot.max())/load_rr_hot.max():.1%}")
+
+
+def main() -> None:
+    link_load_model()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Shared benchmark infrastructure.
+
+Default profile is a proportionally scaled-down fat tree (64 hosts, 8x8x8,
+full bisection, same 50% background-load geometry as the paper's 1024-host
+network) so the whole suite runs on CPU in minutes. ``--paper-scale`` (or
+BENCH_PAPER_SCALE=1) switches to the paper's exact 1024-host network;
+BENCH_FAST=1 shrinks further for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from repro.core.canary import SimConfig, paper_config, scaled_config
+
+PAPER = bool(int(os.environ.get("BENCH_PAPER_SCALE", "0")))
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+def bench_cfg(**overrides) -> SimConfig:
+    if PAPER:
+        return paper_config(**overrides)
+    if FAST:
+        return scaled_config(4, **overrides)
+    return scaled_config(8, **overrides)
+
+
+def bench_hosts(fraction: float) -> int:
+    cfg = bench_cfg()
+    return max(2, int(cfg.num_hosts * fraction))
+
+
+def bench_size() -> int:
+    if PAPER:
+        return 4 * 2 ** 20          # the paper's 4 MiB
+    if FAST:
+        return 128 * 2 ** 10
+    return 2 ** 20                  # 1 MiB at 1/16 scale
+
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,34 @@
+"""Fig. 10: multiple concurrent allreduces (multi-tenancy, §3.4/§5.2.4):
+average per-app goodput and link utilization as tenant count grows. The
+descriptor table is statically partitioned across apps, as the paper does
+for its static-tree baselines and Canary alike in this experiment."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import FAST, bench_cfg, bench_size, emit, timed
+
+
+def main(reps: int = 1) -> None:
+    cfg = dataclasses.replace(bench_cfg(), partition_table=True)
+    total = cfg.num_hosts  # all hosts participate across the tenants
+    size = bench_size()
+    counts = (2, 4) if FAST else (1, 2, 4, 8, 16)
+    for apps in counts:
+        for algo, nt, label in ((Algo.RING, 1, "ring"),
+                                (Algo.STATIC_TREE, 1, "static1"),
+                                (Algo.STATIC_TREE, 4, "static4"),
+                                (Algo.CANARY, 1, "canary")):
+            r, us = timed(run_allreduce, cfg, algo, total, size, n_trees=nt,
+                          congestion=False, num_apps=apps, reps=reps)
+            emit(f"fig10/{label}/apps={apps}", us,
+                 f"goodput_gbps={r.goodput_gbps_mean:.1f};"
+                 f"util_avg={statistics.mean(r.link_utilization):.3f};"
+                 f"correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig. 11: sensitivity to the aggregation timeout and sender-side OS noise
+(each send delayed 1us with probability p), with and without congestion."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import FAST, bench_cfg, bench_hosts, bench_size, emit, timed
+
+
+def main(reps: int = 1) -> None:
+    base = bench_cfg()
+    n = bench_hosts(0.5)
+    size = bench_size()
+    timeouts = (1000.0,) if FAST else (1000.0, 2000.0, 3000.0)
+    probs = (0.01,) if FAST else (0.0001, 0.01, 0.10)
+    for cong in (False, True):
+        # static-tree reference (noise applies to it too)
+        r, us = timed(run_allreduce, base, Algo.STATIC_TREE, n, size,
+                      n_trees=4, congestion=cong, reps=reps)
+        emit(f"fig11/static4/cong={int(cong)}", us,
+             f"goodput_gbps={r.goodput_gbps_mean:.1f}")
+        for to in timeouts:
+            for p in probs:
+                cfg = dataclasses.replace(base, timeout_ns=to, noise_prob=p,
+                                          noise_delay_ns=1000.0)
+                r, us = timed(run_allreduce, cfg, Algo.CANARY, n, size,
+                              congestion=cong, reps=reps)
+                s = r.reps[0]
+                emit(f"fig11/canary/t={to:.0f}ns/p={p}/cong={int(cong)}", us,
+                     f"goodput_gbps={r.goodput_gbps_mean:.1f};"
+                     f"stragglers={s.stragglers};correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

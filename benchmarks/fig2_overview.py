@@ -1,0 +1,27 @@
+"""Fig. 2: goodput of ring vs static in-network vs Canary at 1% and 75% of
+hosts, with and without background congestion."""
+from __future__ import annotations
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import bench_cfg, bench_hosts, bench_size, emit, timed
+
+
+def main(reps: int = 1) -> None:
+    cfg = bench_cfg()
+    size = bench_size()
+    for frac in (0.01, 0.75):
+        n = bench_hosts(frac)
+        for cong in (False, True):
+            for algo, nt, label in ((Algo.RING, 1, "ring"),
+                                    (Algo.STATIC_TREE, 1, "static1"),
+                                    (Algo.CANARY, 1, "canary")):
+                r, us = timed(run_allreduce, cfg, algo, n, size, n_trees=nt,
+                              congestion=cong, reps=reps)
+                emit(f"fig2/{label}/hosts{frac:.0%}/cong={int(cong)}", us,
+                     f"goodput_gbps={r.goodput_gbps_mean:.1f};"
+                     f"correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig. 6: single-switch aggregation goodput (Tofino prototype calibration).
+
+Two measurements stand in for the testbed:
+* the simulator's single-leaf scenario (two hosts inject, the leaf
+  aggregates, calibrated to forward at line rate with 128 B payloads), and
+* the Pallas packet-accumulate kernel's software-switch throughput
+  (packets/s -> Gbps at the paper's 128 B useful payload).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
+from repro.kernels.ops import packet_accumulate_op
+
+from .common import FAST, emit, timed
+
+
+def sim_single_switch() -> None:
+    # two hosts on one leaf; the paper measures leaf aggregation goodput
+    cfg = SimConfig(num_leaves=2, hosts_per_leaf=2, num_spines=2,
+                    payload_bytes=128, table_size=65536, seed=0)
+    size = (256 if FAST else 4096) * 1024
+    sim = Simulator(cfg, [AllreduceJob(0, [0, 1], size)], algo=Algo.CANARY)
+    r, us = timed(sim.run)
+    emit("fig6/sim_leaf_128B", us,
+         f"goodput_gbps={list(r.goodput_gbps.values())[0]:.1f};"
+         f"correct={r.correct}")
+
+
+def kernel_switch() -> None:
+    n, d, slots = (1024, 32, 256) if FAST else (4096, 32, 1024)
+    ids = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, slots)
+    pay = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    out = packet_accumulate_op(ids, pay, slots)  # compile
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        out = packet_accumulate_op(ids, pay, slots)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    payload_bytes = n * d * 4
+    gbps = payload_bytes * 8 / dt / 1e9
+    emit("fig6/kernel_accumulate", dt * 1e6,
+         f"sw_switch_gbps={gbps:.2f};pkts={n};payload=128B")
+
+
+def main() -> None:
+    sim_single_switch()
+    kernel_switch()
+
+
+if __name__ == "__main__":
+    main()

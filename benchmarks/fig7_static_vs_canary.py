@@ -1,0 +1,37 @@
+"""Fig. 7: 50% of hosts run the allreduce, 50% generate congestion —
+goodput for 1/2/4/8 static trees vs Canary, plus link-utilization stats."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import bench_cfg, bench_hosts, bench_size, emit, timed
+
+
+def _util_stats(utils) -> str:
+    idle = sum(1 for u in utils if u < 0.05) / len(utils)
+    hot = sum(1 for u in utils if u > 0.8) / len(utils)
+    return (f"util_avg={statistics.mean(utils):.3f};idle={idle:.2f};"
+            f"hot={hot:.2f}")
+
+
+def main(reps: int = 2) -> None:
+    cfg = bench_cfg()
+    n = bench_hosts(0.5)
+    size = bench_size()
+    for cong in (False, True):
+        for algo, nt, label in ((Algo.STATIC_TREE, 1, "static1"),
+                                (Algo.STATIC_TREE, 2, "static2"),
+                                (Algo.STATIC_TREE, 4, "static4"),
+                                (Algo.STATIC_TREE, 8, "static8"),
+                                (Algo.CANARY, 1, "canary")):
+            r, us = timed(run_allreduce, cfg, algo, n, size, n_trees=nt,
+                          congestion=cong, reps=reps)
+            emit(f"fig7/{label}/cong={int(cong)}", us,
+                 f"goodput_gbps={r.goodput_gbps_mean:.1f};"
+                 f"{_util_stats(r.link_utilization)};correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

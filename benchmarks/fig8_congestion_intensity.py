@@ -1,0 +1,27 @@
+"""Fig. 8: goodput vs fraction of hosts running the allreduce (the rest
+generate congestion)."""
+from __future__ import annotations
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import FAST, bench_cfg, bench_hosts, bench_size, emit, timed
+
+
+def main(reps: int = 1) -> None:
+    cfg = bench_cfg()
+    size = bench_size()
+    fracs = (0.25, 0.75) if FAST else (0.05, 0.25, 0.5, 0.75)
+    for frac in fracs:
+        n = bench_hosts(frac)
+        for algo, nt, label in ((Algo.RING, 1, "ring"),
+                                (Algo.STATIC_TREE, 1, "static1"),
+                                (Algo.STATIC_TREE, 4, "static4"),
+                                (Algo.CANARY, 1, "canary")):
+            r, us = timed(run_allreduce, cfg, algo, n, size, n_trees=nt,
+                          congestion=True, reps=reps)
+            emit(f"fig8/{label}/hosts{frac:.0%}", us,
+                 f"goodput_gbps={r.goodput_gbps_mean:.1f};correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

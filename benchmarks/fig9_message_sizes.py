@@ -1,0 +1,31 @@
+"""Fig. 9: allreduce runtime vs message size (20% hosts allreduce, 80%
+congestion). Small messages expose the timeout latency; large messages are
+bandwidth-dominated."""
+from __future__ import annotations
+
+from repro.core.canary import Algo, run_allreduce
+
+from .common import FAST, PAPER, bench_cfg, bench_hosts, emit, timed
+
+
+def main(reps: int = 1) -> None:
+    cfg = bench_cfg()
+    n = bench_hosts(0.20)
+    kib = 1024
+    sizes = (1 * kib, 64 * kib) if FAST else \
+        (1 * kib, 16 * kib, 256 * kib, 1024 * kib) + \
+        ((4096 * kib,) if PAPER else ())
+    for cong in (False, True):
+        for size in sizes:
+            for algo, nt, label in ((Algo.RING, 1, "ring"),
+                                    (Algo.STATIC_TREE, 4, "static4"),
+                                    (Algo.CANARY, 1, "canary")):
+                r, us = timed(run_allreduce, cfg, algo, n, size, n_trees=nt,
+                              congestion=cong, reps=reps)
+                emit(f"fig9/{label}/{size//kib}KiB/cong={int(cong)}", us,
+                     f"runtime_us={r.runtime_us_mean:.1f};"
+                     f"correct={r.correct}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""§3.2.2: switch memory occupancy — analytic model vs simulation."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.canary import (Algo, AllreduceJob, Simulator, paper_example)
+from repro.core.canary.memory_model import model_for
+
+from .common import bench_cfg, bench_hosts, bench_size, emit, timed
+
+
+def main() -> None:
+    m = paper_example()
+    emit("mem_model/paper_example", 0.0,
+         f"occupancy_kib={m.occupancy_kib:.1f};expected~175KiB")
+    cfg = bench_cfg()
+    model = model_for(cfg, diameter=2)
+    for size_mult in (1, 4):
+        size = bench_size() * size_mult
+        sim = Simulator(cfg, [AllreduceJob(0, list(range(bench_hosts(0.5))),
+                                           size)], algo=Algo.CANARY)
+        r, us = timed(sim.run)
+        emit(f"mem_model/sim_size_x{size_mult}", us,
+             f"max_desc_bytes={r.max_descriptor_bytes};"
+             f"model_bound_bytes={model.occupancy_bytes:.0f};"
+             f"within_2x_bound="
+             f"{r.max_descriptor_bytes <= 2 * model.occupancy_bytes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/) and prints
+the three-term roofline per (arch x shape x mesh) — deliverable (g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load_all(out_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main() -> None:
+    rows = load_all()
+    if not rows:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return
+    for r in rows:
+        roof = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("grad_sync", "auto") != "auto":
+            name += f"/{r['grad_sync']}"
+        emit(name, r["compile_s"] * 1e6,
+             f"compute_s={roof['compute_s']:.4f};"
+             f"memory_s={roof['memory_s']:.4f};"
+             f"collective_s={roof['collective_s']:.4f};"
+             f"dominant={roof['dominant']};"
+             f"useful={roof['useful_flops_ratio']:.2f};"
+             f"mem_gib={r['memory']['total_bytes']/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark suite entry point — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows. Environment knobs:
+BENCH_FAST=1 (CI smoke), BENCH_PAPER_SCALE=1 (the paper's 1024-host network
+and 4 MiB messages — slow), BENCH_ONLY=fig7 (comma-list filter).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (collective_bench, fig2_overview, fig6_single_switch,
+                   fig7_static_vs_canary, fig8_congestion_intensity,
+                   fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,
+                   mem_model, roofline)
+    suites = {
+        "fig2": fig2_overview.main,
+        "fig6": fig6_single_switch.main,
+        "fig7": fig7_static_vs_canary.main,
+        "fig8": fig8_congestion_intensity.main,
+        "fig9": fig9_message_sizes.main,
+        "fig10": fig10_concurrent.main,
+        "fig11": fig11_timeout_noise.main,
+        "mem_model": mem_model.main,
+        "collective": collective_bench.main,
+        "roofline": roofline.main,
+    }
+    only = os.environ.get("BENCH_ONLY")
+    if only:
+        keep = set(only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Train a reduced DeepSeekMoE with the Canary gradient allreduce over an
+8-way data-parallel mesh (8 simulated CPU devices), comparing grad-sync
+strategies: XLA auto vs ring vs Canary dynamic trees vs fixed-point Canary.
+
+    python examples/train_moe_canary.py      # (sets its own XLA_FLAGS)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data import DataConfig
+from repro.models import get_config
+from repro.optim import AdamWConfig
+from repro.parallel.context import ParallelContext, parallel_context
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def run(grad_sync: str, steps: int = 20) -> list:
+    cfg = get_config("deepseek-moe-16b", "smoke")
+    mesh = jax.make_mesh((8, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tc = TrainConfig(model=cfg, optimizer=AdamWConfig(lr=5e-3),
+                     grad_sync=grad_sync, canary_blocks=8)
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=16, seq_len=32)
+    ctx = ParallelContext(mesh=mesh, data_axes=("data",), model_axis="model")
+    with parallel_context(ctx):
+        trainer = Trainer(TrainerConfig(train=tc, data=data, steps=steps,
+                                        log_every=0), mesh=mesh)
+        history = trainer.run()
+    return [h["loss"] for h in history]
+
+
+def main() -> None:
+    results = {}
+    for mode in ("auto", "ring", "canary", "canary_fp"):
+        losses = run(mode)
+        results[mode] = losses
+        print(f"{mode:10s} loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    # every strategy implements the same mathematical allreduce: loss curves
+    # must agree closely (fixed-point within quantization error)
+    ref = np.array(results["auto"])
+    for mode in ("ring", "canary"):
+        np.testing.assert_allclose(np.array(results[mode]), ref, rtol=2e-2,
+                                   atol=2e-2)
+    np.testing.assert_allclose(np.array(results["canary_fp"]), ref, rtol=5e-2,
+                               atol=5e-2)
+    print("all grad-sync strategies converge identically — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Faithful packet-level reproduction of Canary (§3-§5 of the paper)."""
+from .algorithms import ExperimentResult, compare_algorithms, run_allreduce
+from .memory_model import OccupancyModel, model_for, paper_example
+from .simulator import Simulator, contribution
+from .types import (Algo, AllreduceJob, Descriptor, LoadBalancing, Packet,
+                    PacketKind, SimConfig, SimResult, block_key, id_app,
+                    id_block, id_gen, make_id, paper_config, scaled_config)
+
+__all__ = [
+    "Algo", "AllreduceJob", "Descriptor", "ExperimentResult", "LoadBalancing",
+    "OccupancyModel", "Packet", "PacketKind", "SimConfig", "SimResult",
+    "Simulator", "block_key", "compare_algorithms", "contribution", "id_app",
+    "id_block", "id_gen", "make_id", "model_for", "paper_example",
+    "paper_config", "run_allreduce", "scaled_config",
+]

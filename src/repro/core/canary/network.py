@@ -1,0 +1,171 @@
+"""Two-level fat-tree network model (§5.2).
+
+Topology (paper defaults): 32 leaf switches with 64 ports each (32 down to
+hosts, 32 up — one to each spine), 32 spine switches with 32 ports (one per
+leaf). 100 Gb/s everywhere, 300 ns per hop.
+
+Node addressing
+---------------
+* hosts:   ``0 .. num_hosts-1``; host ``h`` hangs off leaf ``h // hosts_per_leaf``.
+* switches (global index): leaves ``0 .. L-1``, spines ``L .. L+S-1``.
+
+Port numbering (matches the children-bitmap semantics of §4.2)
+---------------------------------------------------------------
+* leaf ``l``:  port ``p < hosts_per_leaf``  -> host ``l*hosts_per_leaf + p`` (down)
+               port ``hosts_per_leaf + s``  -> spine ``s``                  (up)
+* spine ``s``: port ``l``                   -> leaf ``l``                   (down)
+
+Links are unidirectional servers with a FIFO-queue fluid model: a link keeps
+``busy_until`` — the time its output is committed through — and the backlog at
+time ``t`` is ``(busy_until - t) * bytes_per_ns``. This gives exact
+serialization + queueing delay for FIFO ports without per-byte events, and is
+what the adaptive load-balancing policy (§5.2: "up port with the smallest
+number of enqueued bytes") inspects.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Tuple
+
+from .types import SimConfig
+
+
+class Link:
+    """A unidirectional link with serialization, propagation and a FIFO queue."""
+
+    __slots__ = ("busy_until", "bytes_sent", "bytes_per_ns", "latency_ns", "capacity")
+
+    def __init__(self, bytes_per_ns: float, latency_ns: float, capacity: int):
+        self.busy_until = 0.0
+        self.bytes_sent = 0
+        self.bytes_per_ns = bytes_per_ns
+        self.latency_ns = latency_ns
+        self.capacity = capacity
+
+    def backlog_bytes(self, now: float) -> float:
+        b = (self.busy_until - now) * self.bytes_per_ns
+        return b if b > 0.0 else 0.0
+
+    def occupancy(self, now: float) -> float:
+        return self.backlog_bytes(now) / self.capacity
+
+    def transmit(self, now: float, size_bytes: int) -> float:
+        """Enqueue ``size_bytes`` at ``now``; return arrival time at the far end."""
+        start = self.busy_until if self.busy_until > now else now
+        self.busy_until = start + size_bytes / self.bytes_per_ns
+        self.bytes_sent += size_bytes
+        return self.busy_until + self.latency_ns
+
+
+class FatTree:
+    """Topology + routing. Switch indices are global (leaves then spines)."""
+
+    def __init__(self, cfg: SimConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.L = cfg.num_leaves
+        self.S = cfg.num_spines
+        self.H = cfg.hosts_per_leaf
+        bpn, lat, cap = cfg.bytes_per_ns, cfg.hop_latency_ns, cfg.buffer_bytes
+
+        def mk() -> Link:
+            return Link(bpn, lat, cap)
+
+        # host <-> leaf
+        self.host_up = [mk() for _ in range(cfg.num_hosts)]    # host -> leaf
+        self.host_down = [mk() for _ in range(cfg.num_hosts)]  # leaf -> host
+        # leaf <-> spine (full bipartite)
+        self.leaf_up = [[mk() for _ in range(self.S)] for _ in range(self.L)]
+        self.leaf_down = [[mk() for _ in range(self.S)] for _ in range(self.L)]
+        # flowlet tables: (leaf, flow key) -> committed spine [37]
+        self.flowlets: dict = {}
+
+    # ---- helpers -----------------------------------------------------------
+    def leaf_of(self, host: int) -> int:
+        return host // self.H
+
+    def is_leaf(self, sw: int) -> bool:
+        return sw < self.L
+
+    def spine_index(self, sw: int) -> int:
+        return sw - self.L
+
+    # Port maps (see module docstring).
+    def leaf_port_of_host(self, host: int) -> int:
+        return host % self.H
+
+    def leaf_port_of_spine(self, spine: int) -> int:
+        return self.H + spine
+
+    def spine_port_of_leaf(self, leaf: int) -> int:
+        return leaf
+
+    # ---- LB: pick the up-port (spine) for a packet leaving ``leaf`` --------
+    def pick_spine(self, leaf: int, now: float, flow_hash: int,
+                   rng: Optional[random.Random] = None,
+                   dest_leaf: int = -1, policy: Optional[str] = None) -> int:
+        """Congestion-aware up-port selection (§2.1, §5.2).
+
+        The paper's premise is an existing congestion-aware load-balancing
+        substrate (CONGA [37], DRILL [41], ...). CONGA-style schemes measure
+        *path* congestion, so when the destination leaf is known the metric
+        is the up-link backlog **plus** the spine->dest-leaf down-link
+        backlog; purely local schemes would leave destination-side hotspots
+        invisible.
+        """
+        cfg = self.cfg
+        default = flow_hash % self.S
+        lb = policy if policy is not None else cfg.lb
+        if lb == "ecmp":
+            return default
+        ups = self.leaf_up[leaf]
+        path_aware = cfg.path_aware_lb
+
+        def path_backlog(s: int) -> float:
+            b = ups[s].backlog_bytes(now)
+            if path_aware and dest_leaf >= 0 and dest_leaf != leaf:
+                b += self.leaf_down[dest_leaf][s].backlog_bytes(now)
+            return b
+
+        if lb == "adaptive":
+            thr = cfg.lb_threshold * cfg.buffer_bytes
+            if path_backlog(default) <= thr:
+                return default
+        # least-loaded path (ties broken by default ordering for determinism)
+        best, best_b = default, path_backlog(default)
+        for s in range(self.S):
+            b = path_backlog(s)
+            if b < best_b - 1e-9:
+                best, best_b = s, b
+        return best
+
+    def pick_spine_flowlet(self, leaf: int, now: float, flow_hash: int,
+                           flow_key: object, rng=None,
+                           dest_leaf: int = -1,
+                           policy: Optional[str] = None) -> int:
+        """Flowlet-sticky variant: decide once per flow key, then stick [37]."""
+        key = (leaf, flow_key)
+        cached = self.flowlets.get(key)
+        if cached is not None:
+            return cached
+        spine = self.pick_spine(leaf, now, flow_hash, rng, dest_leaf=dest_leaf,
+                                policy=policy)
+        self.flowlets[key] = spine
+        return spine
+
+    # ---- utilization accounting ---------------------------------------------
+    def all_links(self) -> List[Link]:
+        out: List[Link] = []
+        out.extend(self.host_up)
+        out.extend(self.host_down)
+        for row in self.leaf_up:
+            out.extend(row)
+        for row in self.leaf_down:
+            out.extend(row)
+        return out
+
+    def utilizations(self, duration_ns: float) -> List[float]:
+        if duration_ns <= 0:
+            return [0.0 for _ in self.all_links()]
+        denom = duration_ns * self.cfg.bytes_per_ns
+        return [min(1.0, l.bytes_sent / denom) for l in self.all_links()]

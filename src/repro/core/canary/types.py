@@ -1,0 +1,296 @@
+"""Core datatypes for the Canary packet-level discrete-event simulator.
+
+This module mirrors the entities of the paper:
+
+* ``Packet`` — the Canary packet format of §4.1 (destination/leader address,
+  block ``id``, aggregation ``counter``, participating ``hosts`` count, the
+  collision stamp fields ``switch_addr``/``port_stamp``, the ``bypass`` and
+  ``multicast`` flags, and the payload ``value``).
+* ``Descriptor`` — the per-block switch state of §3.1.1 (accumulator, children
+  port set, timer, counter) stored in a static hash-indexed array (§3.2).
+* ``SimConfig`` — the simulated world: the two-level fat tree of §5.2
+  (32 leaf switches x 64 ports, 32 spines x 32 ports, 100 Gb/s links), packet
+  framing from the Tofino prototype of §5.1, and the §5.2 congestion model.
+
+Values carried by packets are Python integers so that every simulation is an
+*exact* end-to-end correctness check of the allreduce (integer addition is
+associative — any aggregation order must give the same total).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class PacketKind(enum.IntEnum):
+    """Kinds of packets flowing through the simulated network."""
+
+    REDUCE = 0       # host/switch partial aggregate flowing toward the leader
+    BCAST = 1        # fully-reduced data flowing down the recorded tree
+    RESTORE = 2      # leader -> switch tree-restoration packet (§3.2.1)
+    RETX_REQ = 3     # host -> leader retransmission request (§3.3)
+    FAIL = 4         # leader -> host "reduce this block again" message (§3.3)
+    UNICAST_DATA = 5 # leader -> host retransmitted reduced block (§3.3)
+    NOISE = 6        # background congestion traffic (random uniform, §5.2)
+    RING = 7         # host-based ring allreduce traffic (baseline, §5.2)
+
+
+class Algo(enum.StrEnum):
+    """Allreduce algorithms implemented in the simulator (§5.2)."""
+
+    CANARY = "canary"
+    STATIC_TREE = "static_tree"   # N static trees (N=1 ~ SHARP/SwitchML/ATP, N>1 ~ PANAMA)
+    RING = "ring"                 # bandwidth-optimal host-based ring
+
+
+class LoadBalancing(enum.StrEnum):
+    """Up-port selection policies at the leaf switches."""
+
+    ECMP = "ecmp"            # hash-based, congestion-oblivious
+    ADAPTIVE = "adaptive"    # paper §5.2: default port unless >50% full, then min-queue
+    PER_PACKET = "per_packet"  # always pick the least-loaded up-port (DRILL-like)
+
+
+_PKT_SEQ = 0
+
+
+@dataclass(slots=True)
+class Packet:
+    """A Canary packet (§4.1). ``size_bytes`` includes header framing."""
+
+    kind: PacketKind
+    dest: int                 # destination host id (the leader for REDUCE)
+    id: int                   # unique block id: (app << APP_SHIFT) | (block << GEN_BITS) | gen
+    counter: int = 0          # number of already-reduced host contributions
+    hosts: int = 0            # number of hosts participating in the reduction
+    value: int = 0            # payload (exact integer aggregation check)
+    bypass: bool = False      # set after a collision: switches must not process
+    multicast: bool = False   # set on broadcast-phase packets
+    switch_addr: int = -1     # collision stamp: switch address (§3.2.1)
+    port_stamp: int = -1      # collision stamp: in-port at that switch (§3.2.1)
+    restore_ports: Tuple[int, ...] = ()  # RESTORE: ports bitmap payload (§3.2.1)
+    dest_switch: int = -1     # RESTORE: target switch address
+    size_bytes: int = 0
+    src: int = -1             # source host (for RETX_REQ / debugging)
+    chunk: int = -1           # RING: chunk index
+    step: int = -1            # RING: algorithm step
+
+
+# --- Block id packing -------------------------------------------------------
+# id = (app << APP_SHIFT) | (block << GEN_BITS) | generation
+# A retransmitted block gets a fresh generation so that it hashes to (likely)
+# different descriptor slots and ECMP paths, exactly as §3.3 prescribes
+# ("the hosts re-issue the reduction of that packet with a different id").
+GEN_BITS = 6
+APP_SHIFT = 40
+
+
+def make_id(app: int, block: int, generation: int = 0) -> int:
+    return (app << APP_SHIFT) | (block << GEN_BITS) | generation
+
+
+def id_app(pid: int) -> int:
+    return pid >> APP_SHIFT
+
+
+def id_block(pid: int) -> int:
+    return (pid >> GEN_BITS) & ((1 << (APP_SHIFT - GEN_BITS)) - 1)
+
+
+def id_gen(pid: int) -> int:
+    return pid & ((1 << GEN_BITS) - 1)
+
+
+def block_key(pid: int) -> Tuple[int, int]:
+    """(app, block) — generation-independent identity of a reduction block."""
+    return (id_app(pid), id_block(pid))
+
+
+@dataclass(slots=True)
+class Descriptor:
+    """Per-block soft state held by a switch (§3.1.1, §3.2).
+
+    Allocated on the first REDUCE packet of a block, deallocated when the
+    BCAST sweep passes through (or when garbage-collected after ``gc_ns`` of
+    inactivity — stale generations abandoned by a retransmission would
+    otherwise leak, a detail the paper leaves to the implementation).
+    """
+
+    id: int
+    slot: int
+    value: int = 0
+    counter: int = 0
+    hosts: int = 0
+    children: Set[int] = field(default_factory=set)
+    sent: bool = False            # timer fired (or early completion) — partial forwarded
+    expected: int = -1            # STATIC_TREE mode: exact child count to wait for
+    alloc_ns: float = 0.0
+    last_ns: float = 0.0
+    timer_seq: int = 0            # guards against stale timer events
+
+
+@dataclass
+class SimConfig:
+    """World configuration. Defaults reproduce the paper's §5.2 setup."""
+
+    # -- topology: two-level fat tree ----------------------------------------
+    num_leaves: int = 32
+    hosts_per_leaf: int = 32
+    num_spines: int = 32
+
+    # -- links ---------------------------------------------------------------
+    link_gbps: float = 100.0          # hosts and switches: 100 Gb/s NICs/ports
+    hop_latency_ns: float = 300.0     # per-hop delay (§3.2.2 cites ~300 ns)
+    buffer_bytes: int = 131072        # per output port; 50% threshold for adaptive LB
+
+    # -- packet framing (§5.1: Tofino prototype calibration) ------------------
+    payload_bytes: int = 1024         # 256 x 4 B elements (large-sim setting, §5.1)
+    header_bytes: int = 57            # 19 B Canary + 14 B Ethernet + 24 B framing
+
+    # -- Canary data plane -----------------------------------------------------
+    timeout_ns: float = 1000.0        # descriptor aggregation window (§3.1.1)
+    table_size: int = 32768           # descriptor array entries (§5.1: 32K on Tofino)
+    partition_table: bool = False     # statically partition table across apps (§3.2.1)
+    gc_ns: float = 5e6                # descriptor idle GC (see Descriptor docstring)
+
+    # -- load balancing --------------------------------------------------------
+    lb: LoadBalancing = LoadBalancing.ADAPTIVE
+    # Background (non-allreduce) traffic policy. The paper's premise (§2.1) is
+    # that production traffic load-balanced with ECMP "often experiences
+    # congestion, even in the presence of alternative non-congested paths";
+    # the congestion-aware substrate is what *Canary* packets ride on. We keep
+    # both knobs so the sensitivity is measurable (EXPERIMENTS.md §Sim).
+    noise_lb: LoadBalancing = LoadBalancing.ECMP
+    lb_threshold: float = 0.5         # occupancy fraction that triggers adaptation
+    # CONGA-style path-level congestion metric (up + remote down-link backlog)
+    # vs. purely local up-port queues. Canary is "orthogonal to the load
+    # balancing algorithm" (§3); CONGA [37] is the paper's canonical example
+    # and measures path congestion, so this defaults to True for allreduce
+    # traffic. Sensitivity measured in EXPERIMENTS.md §Sim.
+    path_aware_lb: bool = True
+    # Flowlet switching [37]: point-to-point flows (congestion traffic, ring
+    # chunks, unicast control) pick an up-port once per flowlet/message and
+    # stick to it; re-decision happens on a new flowlet. Canary's aggregated
+    # partials are one packet per (switch, block), i.e. inherently per-packet.
+    flowlet_lb: bool = True
+
+    # -- reliability (§3.3) ----------------------------------------------------
+    drop_prob: float = 0.0            # iid per-link packet drop probability
+    retx_timeout_ns: float = 2.0e5    # ~2 RTT at simulated scale
+    max_generations: int = 8          # then fall back to host-based (bypass) reduce
+    switch_fail_ns: Optional[float] = None  # time at which `failed_switch` dies
+    failed_switch: Optional[int] = None     # global switch index
+
+    # -- host behaviour ---------------------------------------------------------
+    noise_prob: float = 0.0           # §5.2.5: P(delay a send by noise_delay_ns)
+    noise_delay_ns: float = 1000.0
+    noise_msg_bytes: int = 65536      # congestion flows: message size between re-picks
+    leader_aggregate_ns: float = 1000.0  # host-side per-block leader processing (§3.2.2 "r")
+
+    # -- experiment ------------------------------------------------------------
+    seed: int = 0
+    max_events: int = 200_000_000     # safety valve
+
+    # Derived ------------------------------------------------------------------
+    @property
+    def num_hosts(self) -> int:
+        return self.num_leaves * self.hosts_per_leaf
+
+    @property
+    def num_switches(self) -> int:
+        return self.num_leaves + self.num_spines
+
+    @property
+    def bytes_per_ns(self) -> float:
+        return self.link_gbps / 8.0  # Gb/s -> B/ns
+
+    @property
+    def mtu_bytes(self) -> int:
+        return self.payload_bytes + self.header_bytes
+
+    def validate(self) -> None:
+        if self.num_spines > self.hosts_per_leaf:
+            # the paper's fat tree is full-bisection: 32 up + 32 down ports/leaf
+            raise ValueError("leaf switches need hosts_per_leaf >= num_spines uplinks "
+                             "only in oversubscribed setups; got more spines than uplinks")
+        if self.payload_bytes <= 0 or self.timeout_ns <= 0:
+            raise ValueError("payload_bytes and timeout_ns must be positive")
+
+
+def paper_config(**overrides) -> "SimConfig":
+    """The paper's §5.2 network: 1024 hosts, 32 leaves x 64 ports, 32 spines."""
+    base = dict(num_leaves=32, hosts_per_leaf=32, num_spines=32,
+                link_gbps=100.0, payload_bytes=1024, table_size=32768)
+    base.update(overrides)
+    return SimConfig(**base)
+
+
+def scaled_config(scale: int = 8, **overrides) -> "SimConfig":
+    """A proportionally scaled-down full-bisection fat tree (scale^2 hosts)
+    that keeps the paper's 50%-background-load geometry but runs in seconds
+    on CPU. Used by tests and the default benchmark profile."""
+    base = dict(num_leaves=scale, hosts_per_leaf=scale, num_spines=scale,
+                link_gbps=100.0, payload_bytes=1024,
+                table_size=max(4096, scale * scale * 64))
+    base.update(overrides)
+    return SimConfig(**base)
+
+
+@dataclass
+class AllreduceJob:
+    """One application's collective over ``participants``.
+
+    ``collective`` (paper §6, "Support for other collectives"):
+
+    * ``allreduce`` — reduce + broadcast (the default).
+    * ``reduce``    — the destination (``root``) acts as the leader for every
+                      block and the broadcast phase is skipped.
+    * ``broadcast`` — the source (``root``) acts as the leader and the
+                      aggregation is skipped: receivers send empty *join*
+                      packets toward the source (recording the dynamic tree)
+                      and the source's data rides the broadcast phase down.
+    * ``barrier``   — a 0-byte allreduce (header-only packets).
+    """
+
+    app: int
+    participants: List[int]
+    data_bytes: int
+    collective: str = "allreduce"
+    root: Optional[int] = None     # reduce destination / broadcast source
+
+    def num_blocks(self, payload_bytes: int) -> int:
+        if self.collective == "barrier":
+            return 1
+        return max(1, -(-self.data_bytes // payload_bytes))
+
+
+@dataclass
+class SimResult:
+    """Outputs of one simulation run."""
+
+    duration_ns: float
+    start_ns: float
+    # per-app goodput: data_bytes * 8 / duration of that app's allreduce
+    goodput_gbps: Dict[int, float]
+    correct: bool
+    # diagnostics
+    link_utilization: List[float]          # one sample per directed link
+    avg_utilization: float
+    stragglers: int
+    collisions: int
+    restorations: int
+    retransmissions: int
+    fallbacks: int
+    max_descriptors_per_switch: int
+    max_descriptor_bytes: int
+    events: int
+    dropped_packets: int
+    completed_blocks: int
+
+    def summary(self) -> str:
+        gp = ", ".join(f"app{a}={g:.1f}Gbps" for a, g in sorted(self.goodput_gbps.items()))
+        return (f"t={self.duration_ns/1e3:.1f}us {gp} correct={self.correct} "
+                f"stragglers={self.stragglers} collisions={self.collisions} "
+                f"retx={self.retransmissions} maxdesc={self.max_descriptors_per_switch}")

@@ -1,0 +1,142 @@
+"""Binomial reduction trees over a mesh axis, built from ``lax.ppermute``.
+
+This is the TPU-native analogue of the paper's switch trees: at every round a
+device receives its partner's partial sum and aggregates — the device *is*
+the switch. A tree is parameterized by its ``root``; Canary's "dynamic trees"
+become per-block root assignments (see ``canary_allreduce``), and the
+reduce-phase tree is retraced in reverse for the broadcast phase, exactly as
+in §3.1.2.
+
+Topology note (DESIGN.md §4): on a ring/torus ICI, hop ``j`` of a binomial
+tree moves data across ``2^j`` links; the multi-root schedule spreads those
+hot hops across the ring. A bandwidth-optimal reduce-scatter/all-gather is
+also provided as the "host-based ring" reference point and as the §Perf
+beyond-paper optimization target.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _rounds(n: int) -> int:
+    return max(1, math.ceil(math.log2(n)))
+
+
+def tree_reduce_broadcast(x: jnp.ndarray, axis_name: str, axis_size: int,
+                          root: int) -> jnp.ndarray:
+    """Allreduce ``x`` along ``axis_name`` with a binomial tree rooted at
+    ``root``: log2(N) aggregation rounds toward the root, then the recorded
+    tree is traversed in reverse to broadcast (paper §3.1.1-§3.1.2)."""
+    if axis_size == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    rel = (idx - root) % axis_size
+    acc = x
+    R = _rounds(axis_size)
+    # ---- reduce phase: partial sums climb toward rel=0 ----------------------
+    for j in range(R):
+        stride = 1 << j
+        perm = [(i, (i - stride) % axis_size) for i in range(axis_size)]
+        shifted = lax.ppermute(acc, axis_name, perm)
+        receives = ((rel % (stride * 2)) == 0) & (rel + stride < axis_size)
+        acc = jnp.where(receives, acc + shifted, acc)
+    # ---- broadcast phase: retrace the tree in reverse ------------------------
+    for j in reversed(range(R)):
+        stride = 1 << j
+        perm = [(i, (i + stride) % axis_size) for i in range(axis_size)]
+        shifted = lax.ppermute(acc, axis_name, perm)
+        takes = ((rel % (stride * 2)) == stride) & (rel - stride >= 0)
+        acc = jnp.where(takes, shifted, acc)
+    return acc
+
+
+def multi_root_tree_allreduce(x: jnp.ndarray, axis_name: str, axis_size: int,
+                              roots: Sequence[int]) -> jnp.ndarray:
+    """Blockwise multi-tree allreduce — the Canary schedule.
+
+    ``x`` (any shape) is flattened and split into ``len(roots)`` blocks;
+    block ``k`` is reduced along the tree rooted at ``roots[k]``. All blocks
+    share each round's single ``ppermute`` (the permutation is
+    root-independent; only the aggregation masks differ), so the number of
+    collective ops stays 2*log2(N) regardless of block count.
+    """
+    if axis_size == 1:
+        return x
+    k = len(roots)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % k
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(k, -1)
+    idx = lax.axis_index(axis_name)
+    roots_arr = jnp.asarray(list(roots), jnp.int32)
+    rel = (idx - roots_arr) % axis_size                    # (k,)
+    acc = blocks
+    R = _rounds(axis_size)
+    for j in range(R):
+        stride = 1 << j
+        perm = [(i, (i - stride) % axis_size) for i in range(axis_size)]
+        shifted = lax.ppermute(acc, axis_name, perm)
+        receives = ((rel % (stride * 2)) == 0) & (rel + stride < axis_size)
+        acc = jnp.where(receives[:, None], acc + shifted, acc)
+    for j in reversed(range(R)):
+        stride = 1 << j
+        perm = [(i, (i + stride) % axis_size) for i in range(axis_size)]
+        shifted = lax.ppermute(acc, axis_name, perm)
+        takes = ((rel % (stride * 2)) == stride) & (rel - stride >= 0)
+        acc = jnp.where(takes[:, None], shifted, acc)
+    out = acc.reshape(-1)
+    if pad:
+        out = out[:flat.shape[0] - pad]
+    return out.reshape(x.shape)
+
+
+def _rs_dtype(x: jnp.ndarray) -> jnp.ndarray:
+    """XLA:CPU's AllReducePromotion pass crashes on bf16 reduce-scatter
+    ("Invalid binary instruction opcode copy"); upcast around the collective
+    on the CPU backend only — TPU keeps native bf16 collectives."""
+    if jax.default_backend() == "cpu" and x.dtype == jnp.bfloat16:
+        return x.astype(jnp.float32)
+    return x
+
+
+def ring_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Bandwidth-optimal reduce-scatter + all-gather (the paper's host-based
+    ring reference), via XLA's native collectives."""
+    flat = _rs_dtype(x.reshape(-1))
+    n = lax.axis_size(axis_name)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    scattered = lax.psum_scatter(flat, axis_name, scatter_dimension=0,
+                                 tiled=True)
+    gathered = lax.all_gather(scattered, axis_name, axis=0, tiled=True)
+    if pad:
+        gathered = gathered[:flat.shape[0] - pad]
+    return gathered.reshape(x.shape).astype(x.dtype)
+
+
+def hierarchical_allreduce(x: jnp.ndarray, inner_axis: str, outer_axis: str
+                           ) -> jnp.ndarray:
+    """Two-level reduction: reduce-scatter inside the pod, allreduce of the
+    scattered shards across pods, all-gather inside the pod. The in-switch
+    aggregation analogue: intra-pod traffic is aggregated *before* it crosses
+    the (scarcer) cross-pod links, which see only 1/pod_size of the bytes."""
+    flat = _rs_dtype(x.reshape(-1))
+    n = lax.axis_size(inner_axis)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    scattered = lax.psum_scatter(flat, inner_axis, scatter_dimension=0,
+                                 tiled=True)
+    scattered = lax.psum(scattered, outer_axis)
+    gathered = lax.all_gather(scattered, inner_axis, axis=0, tiled=True)
+    if pad:
+        gathered = gathered[:flat.shape[0] - pad]
+    return gathered.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, batch_at, iterate
+
+__all__ = ["DataConfig", "batch_at", "iterate"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: causal GQA flash attention.
+
+The serving/training compute hot-spot of every attention architecture in the
+zoo. Classic online-softmax blocking: grid (batch, q-head, q-block, kv-block)
+with the innermost kv dimension revisiting a VMEM scratch carrying the
+(running max, running sum, accumulator). Fully-masked kv blocks (kv start
+beyond the causal frontier) skip their matmuls via ``pl.when`` — unlike the
+jnp chunked fallback, the kernel does *not* pay the 2x wasted-FLOP tax.
+
+Validated in interpret mode against ``ref.flash_attention_ref`` across
+shape/dtype sweeps (tests/kernels/).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, -1e30)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip fully-masked kv blocks entirely (no wasted MXU work)
+        pl.when(kj * bk <= qi * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """q: (B, H, S, D); k/v: (B, KV, S, D) with H % KV == 0 -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0
+    group = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, scale=scale)
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True so every entry point runs (and is tested) on
+CPU; on real TPU hardware pass ``interpret=False`` (the launcher does this
+automatically via ``on_tpu()``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .fixedpoint import dequantize, quantize
+from .flash_attention import flash_attention
+from .packet_accum import packet_accumulate
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_op(x, scale, interpret: bool = True):
+    return quantize(x, scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequantize_op(q, scale, interpret: bool = True):
+    return dequantize(q, scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_slots", "interpret"))
+def packet_accumulate_op(slot_ids, payloads, num_slots: int,
+                         interpret: bool = True):
+    return packet_accumulate(slot_ids, payloads, num_slots,
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention_op(q, k, v, causal: bool = True, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def fixed_point_allreduce_wrap(x: jnp.ndarray,
+                               reduce_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                               gmax: jnp.ndarray, bits: int, world: int
+                               ) -> jnp.ndarray:
+    """Quantize -> integer reduce -> dequantize (paper §6 switch arithmetic).
+
+    ``gmax`` must be the *global* max |x| across the reduction participants
+    so every device uses the same scale; headroom for ``world`` summands
+    prevents int32 overflow. Integer addition is associative, so the result
+    is bit-identical for any dynamic tree shape.
+    """
+    scale = (2.0 ** bits - 1.0) / (gmax * world + 1e-30)
+    q = quantize(x, scale, interpret=not on_tpu())
+    r = reduce_fn(q)
+    return dequantize(r, scale, interpret=not on_tpu()).astype(x.dtype)

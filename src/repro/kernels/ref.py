@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Float -> fixed-point int32 (paper §6: switch ALUs are integer-only)."""
+    return jnp.round(x.astype(jnp.float32) * scale).astype(jnp.int32)
+
+
+def dequantize_ref(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) / scale
+
+
+def packet_accumulate_ref(slot_ids: jnp.ndarray, payloads: jnp.ndarray,
+                          num_slots: int) -> jnp.ndarray:
+    """Switch descriptor accumulation (paper §3.1.1): scatter-add each
+    packet's payload into its descriptor slot.
+
+    slot_ids: (N,) int32 in [0, num_slots); payloads: (N, D).
+    Returns (num_slots, D) accumulators.
+    """
+    return jax.ops.segment_sum(payloads.astype(jnp.float32), slot_ids,
+                               num_segments=num_slots)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """GQA attention oracle. q: (B, H, S, D); k/v: (B, KV, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) / jnp.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)

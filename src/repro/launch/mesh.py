@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Target: TPU v5e pods — 256 chips/pod in a (16, 16) mesh; the multi-pod
+configuration stacks 2 pods into (2, 16, 16) over ("pod", "data", "model").
+``pod`` and ``data`` both carry batch parallelism (and FSDP), ``model``
+carries tensor/expert/sequence parallelism.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (CPU) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """(data axes, model axis) for a production-shaped mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+# Hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,50 @@
+"""Serving launcher: batched generation with a reduced config on CPU, or the
+production mesh on TPU.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --batch 4 --prompt-len 16 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_config
+from repro.serving import Engine, ServeConfig
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--sliding-window", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, args.variant)
+    if args.sliding_window:
+        cfg = cfg.long_context_variant(args.sliding_window)
+    engine = Engine(ServeConfig(model=cfg, batch=args.batch,
+                                max_len=args.max_len))
+    key = jax.random.PRNGKey(0)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = 0.02 * jnp.ones((args.batch, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    tokens, stats = engine.generate(prompts, args.new_tokens, frames=frames)
+    print(f"generated {tokens.shape} tokens")
+    print(f"prefill {stats['prefill_s']*1e3:.0f}ms  "
+          f"decode {stats['decode_tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .config import ModelConfig
+from .registry import get_config, list_archs
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          layer_period, prepare_cross_cache)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "get_config",
+           "init_cache", "init_params", "layer_period", "list_archs",
+           "prepare_cross_cache"]

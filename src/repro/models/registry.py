@@ -1,0 +1,23 @@
+"""Architecture registry: name -> ModelConfig (full / smoke)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import ARCH_MODULES, ARCH_NAMES
+from .config import ModelConfig
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_NAMES)
+
+
+def get_config(name: str, variant: str = "full") -> ModelConfig:
+    key = name.lower()
+    if key not in ARCH_MODULES:
+        raise KeyError(f"unknown arch '{name}'; known: {ARCH_NAMES}")
+    mod = ARCH_MODULES[key]
+    if variant == "full":
+        return mod.full()
+    if variant == "smoke":
+        return mod.smoke()
+    raise ValueError(f"unknown variant '{variant}' (full|smoke)")

@@ -1,0 +1,24 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(1, warmup_steps)
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_warmup_constant(peak_lr: float, warmup_steps: int):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(1.0, s / max(1, warmup_steps))
+    return sched

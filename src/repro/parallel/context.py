@@ -1,0 +1,69 @@
+"""Global parallel context: which mesh/axes the model layers should use.
+
+Layers stay mesh-agnostic; the launcher/trainer installs a context and the
+layers consult it for shard_map regions (expert parallelism, Canary grad
+sync) and sharding constraints. When no context is installed (unit tests,
+single CPU) every layer falls back to its single-program path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    mesh: Mesh
+    data_axes: Tuple[str, ...]   # batch-parallel axes, e.g. ("pod", "data")
+    model_axis: str              # tensor/expert-parallel axis
+    # Layers insert batch-sharding constraints on activations at period
+    # boundaries (keeps GSPMD gathering FSDP weights instead of replicating
+    # activations). Must be False inside data-manual shard_map regions.
+    constrain_activations: bool = True
+    # MoE expert-parallel shard_map cannot nest inside a data-manual
+    # shard_map region (explicit grad-sync modes); those set this to False.
+    allow_shardmap_layers: bool = True
+    # Sequence parallelism: shard the sequence dim of boundary activations
+    # over the model axis. Cuts scan-saved residuals (the dominant memory
+    # term for wide models) by tp_size at the cost of per-layer all-gathers.
+    sequence_parallel: bool = False
+
+    @property
+    def data_spec(self) -> Union[str, Tuple[str, ...]]:
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+_state = threading.local()
+
+
+def set_parallel_context(ctx: Optional[ParallelContext]) -> None:
+    _state.ctx = ctx
+
+
+def get_parallel_context() -> Optional[ParallelContext]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def parallel_context(ctx: ParallelContext):
+    prev = get_parallel_context()
+    set_parallel_context(ctx)
+    try:
+        yield ctx
+    finally:
+        set_parallel_context(prev)

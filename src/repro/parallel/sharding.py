@@ -1,0 +1,192 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Policy (MaxText-style FSDP + tensor parallelism):
+
+* ``model`` axis carries tensor parallelism — attention heads, MLP hidden,
+  MoE experts, Mamba inner channels, vocab.
+* the data axes (``("pod", "data")`` or ``("data",)``) carry batch
+  parallelism and FSDP sharding of params + optimizer state.
+* every rule is divisibility-guarded: if the preferred dim does not divide
+  evenly over the axis the rule falls through to the next candidate (e.g.
+  qwen2-7b's 28 heads over a 16-way model axis fall back to sharding
+  d_model over data x model), ending at full replication.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+
+Axes = Union[str, Tuple[str, ...], None]
+
+
+def _axes_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(mesh: Mesh, shape: Tuple[int, ...], spec: P) -> bool:
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            continue
+        if dim % _axes_size(mesh, axes) != 0:
+            return False
+    return True
+
+
+def _first_fit(mesh: Mesh, shape: Tuple[int, ...], options) -> P:
+    for spec in options:
+        if _fits(mesh, shape, spec):
+            return spec
+    return P()
+
+
+def leaf_spec(name: str, shape: Tuple[int, ...], stacked: bool,
+              mesh: Mesh, fsdp: Axes, model: str, use_fsdp: bool = True) -> P:
+    """PartitionSpec for one named parameter leaf."""
+    f = fsdp if use_fsdp else None
+    logical = shape[1:] if stacked else shape
+
+    def out(spec: P) -> P:
+        return P(None, *spec) if stacked else spec
+
+    nd = len(logical)
+    if name == "tok":
+        return out(_first_fit(mesh, logical,
+                              [P(model, f), P(f, model), P(None, model), P()]))
+    if name == "unembed":
+        return out(_first_fit(mesh, logical,
+                              [P(f, model), P(model, f), P(model, None), P()]))
+    if name == "wq":
+        return out(_first_fit(mesh, logical,
+                              [P(f, model, None),
+                               P((*_t(f), model), None, None),
+                               P(f, None, None), P()]))
+    if name in ("wk", "wv"):
+        return out(_first_fit(mesh, logical,
+                              [P(f, model, None), P(f, None, None),
+                               P(model, None, None), P()]))
+    if name == "wo":
+        return out(_first_fit(mesh, logical,
+                              [P(model, None, f),
+                               P(None, None, (*_t(f), model)),
+                               P(None, None, f), P()]))
+    if name in ("bq", "bk", "bv"):
+        return out(_first_fit(mesh, logical, [P(model, None), P()]))
+    if name in ("w_up", "w_gate"):
+        if nd == 3:  # MoE experts (E, d, f)
+            return out(_first_fit(mesh, logical,
+                                  [P(model, f, None), P(None, f, model),
+                                   P(None, model, None), P()]))
+        return out(_first_fit(mesh, logical,
+                              [P(f, model), P(model, None), P()]))
+    if name == "w_down":
+        if nd == 3:  # MoE experts (E, f, d)
+            return out(_first_fit(mesh, logical,
+                                  [P(model, None, f), P(None, model, f),
+                                   P(None, None, model), P()]))
+        return out(_first_fit(mesh, logical,
+                              [P(model, f), P(None, model), P()]))
+    if name == "router":
+        return out(P())
+    if name == "w_in":
+        return out(_first_fit(mesh, logical, [P(f, model), P(None, model), P()]))
+    if name == "w_out":
+        return out(_first_fit(mesh, logical, [P(model, f), P(model, None), P()]))
+    if name == "conv_w":
+        return out(_first_fit(mesh, logical, [P(None, model), P()]))
+    if name == "conv_b":
+        return out(_first_fit(mesh, logical, [P(model), P()]))
+    # norms, scalars, A_log, D, dt_bias, norm_scale ...
+    return out(P())
+
+
+def _t(axes: Axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _leaf_name(path) -> Tuple[str, bool]:
+    """(innermost dict key, is-inside-'layers'/'encoder' stack)."""
+    name = ""
+    stacked = False
+    for k in path:
+        if isinstance(k, DictKey):
+            if k.key in ("layers", "encoder"):
+                stacked = True
+            name = str(k.key)
+    return name, stacked
+
+
+def param_specs(params: Any, mesh: Mesh, *, fsdp: Axes = "data",
+                model: str = "model", use_fsdp: bool = True) -> Any:
+    """Tree of PartitionSpecs matching ``params``."""
+    def rule(path, leaf):
+        name, stacked = _leaf_name(path)
+        return leaf_spec(name, leaf.shape, stacked, mesh, fsdp, model,
+                         use_fsdp=use_fsdp)
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, **kw) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, **kw))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, dp_axes: Axes) -> P:
+    """Batch sharding: data axes when divisible, else replicate."""
+    if global_batch % _axes_size(mesh, dp_axes) == 0:
+        return P(dp_axes)
+    # try the first data axis alone
+    axes = _t(dp_axes)
+    for i in range(len(axes) - 1, 0, -1):
+        sub = axes[:i]
+        if global_batch % _axes_size(mesh, sub) == 0:
+            return P(sub)
+    return P(None)
+
+
+def cache_specs(cache: Any, mesh: Mesh, *, dp_axes: Axes, model: str) -> Any:
+    """Decode-cache sharding: batch over data axes when divisible; KV heads
+    over model when divisible, else cache length over model (sequence-
+    parallel decode attention for long contexts)."""
+    def rule(path, leaf):
+        name, _ = _leaf_name(path)
+        shp = leaf.shape
+        if name in ("k", "v") and len(shp) == 5:       # (n_per, B, C, KV, hd)
+            opts = [P(None, dp_axes, None, model, None),
+                    P(None, dp_axes, model, None, None),
+                    P(None, None, model, None, None),
+                    P(None, dp_axes, None, None, None), P()]
+            return _first_fit(mesh, shp, opts)
+        if name == "state" and len(shp) == 4:          # (n_per, B, h, p, n)? ssm
+            pass
+        if name == "state":                            # (n_per, B, H, P, N)
+            opts = [P(None, dp_axes, model, None, None),
+                    P(None, dp_axes, None, None, None),
+                    P(None, None, model, None, None), P()]
+            return _first_fit(mesh, shp, opts)
+        if name == "conv":                             # (n_per, B, K-1, ch)
+            opts = [P(None, dp_axes, None, model),
+                    P(None, dp_axes, None, None),
+                    P(None, None, None, model), P()]
+            return _first_fit(mesh, shp, opts)
+        if name == "pos":
+            return P()
+        # cross-attention caches etc.
+        if len(shp) >= 2:
+            opts = [P(None, dp_axes), P()]
+            return _first_fit(mesh, shp, opts)
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, cache)

@@ -1,0 +1,27 @@
+"""Training losses: cross-entropy (+ z-loss) and MoE auxiliary terms."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray = None, z_loss: float = 0.0
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """logits (B, S, V) float, labels (B, S) int32. Stable fp32 reduction."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = (nll * mask).sum() / denom
+        acc = ((lg.argmax(-1) == labels) * mask).sum() / denom
+    else:
+        loss = nll.mean()
+        acc = (lg.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "accuracy": acc.astype(jnp.float32)}

@@ -1,0 +1,98 @@
+"""Training loop: data pipeline + train_step + congestion-oracle feedback +
+checkpointing. CPU-scale by design (the examples train ~10-100M-param reduced
+configs); the same code jit-lowers for the production meshes via launch/.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collective import CongestionOracle
+from repro.data import DataConfig, batch_at
+from repro.optim import AdamWConfig
+from .train_step import TrainConfig, init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    train: TrainConfig
+    data: DataConfig
+    steps: int = 50
+    log_every: int = 10
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    replan_every: int = 0     # >0: re-plan canary roots from oracle feedback
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, mesh=None, dp_axes=("data",),
+                 model_axis="model", seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        self.model_axis = model_axis
+        self.params, self.opt_state = init_train_state(
+            cfg.train, jax.random.PRNGKey(seed))
+        self.oracle: Optional[CongestionOracle] = None
+        if cfg.train.grad_sync in ("canary", "canary_fp") and mesh is not None:
+            self.oracle = CongestionOracle(
+                axis_size=mesh.shape[dp_axes[-1]],
+                num_blocks=cfg.train.canary_blocks)
+        self._build_step()
+        self.history: List[Dict[str, float]] = []
+
+    def _build_step(self):
+        tc = self.cfg.train
+        if self.oracle is not None:
+            tc = TrainConfig(model=tc.model, optimizer=tc.optimizer,
+                             grad_sync=tc.grad_sync,
+                             canary_blocks=tc.canary_blocks,
+                             canary_roots=tuple(self.oracle.plan()),
+                             z_loss=tc.z_loss)
+        fn = make_train_step(tc, mesh=self.mesh, dp_axes=self.dp_axes,
+                             model_axis=self.model_axis)
+        self.step_fn = jax.jit(fn, donate_argnums=(0, 1))
+
+    def _make_batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        np_batch = batch_at(self.cfg.data, step)
+        batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+        mcfg = self.cfg.train.model
+        B = self.cfg.data.global_batch
+        if mcfg.frontend == "audio_stub":
+            batch["frames"] = 0.02 * jnp.ones(
+                (B, mcfg.encoder_seq, mcfg.d_model), jnp.dtype(mcfg.dtype))
+        if mcfg.frontend == "vision_stub":
+            batch["patches"] = 0.02 * jnp.ones(
+                (B, mcfg.num_patches, mcfg.d_model), jnp.dtype(mcfg.dtype))
+        return batch
+
+    def run(self) -> List[Dict[str, float]]:
+        cfg = self.cfg
+        for step in range(cfg.steps):
+            batch = self._make_batch(step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics["step"] = step
+            metrics["step_time_s"] = dt
+            self.history.append(metrics)
+            if self.oracle is not None:
+                self.oracle.feedback(dt)
+                if cfg.replan_every and (step + 1) % cfg.replan_every == 0:
+                    self._build_step()   # adopt the re-planned roots
+            if cfg.log_every and step % cfg.log_every == 0:
+                print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                      f"acc {metrics.get('accuracy', 0):.4f} {dt*1e3:.0f}ms")
+            if cfg.checkpoint_dir and cfg.checkpoint_every and \
+                    (step + 1) % cfg.checkpoint_every == 0:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(cfg.checkpoint_dir, step + 1, self.params,
+                                self.opt_state)
+        return self.history

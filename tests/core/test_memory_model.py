@@ -1,0 +1,33 @@
+"""§3.2.2 switch-memory occupancy model tests."""
+from repro.core.canary import Simulator, AllreduceJob, SimConfig
+from repro.core.canary.memory_model import model_for, paper_example
+
+
+def test_paper_example_175kib():
+    m = paper_example()
+    # 100 Gb/s, d=5, l=300ns, t=1us, r=1us  ->  ~175 KiB (paper §3.2.2)
+    assert abs(m.occupancy_kib - 170.9) < 2.0
+    assert m.descriptor_lifetime_ns == 2 * 5 * 1300 + 1000
+
+
+def test_occupancy_scales_with_bandwidth_and_timeout():
+    base = paper_example()
+    import dataclasses
+    double_bw = dataclasses.replace(base, bandwidth_gbps=200.0)
+    assert abs(double_bw.occupancy_bytes - 2 * base.occupancy_bytes) < 1e-6
+    double_t = dataclasses.replace(base, timeout_ns=2000.0)
+    assert double_t.occupancy_bytes > base.occupancy_bytes
+
+
+def test_simulated_occupancy_within_model_bound():
+    """Measured descriptor high-water x MTU stays within the Little's-law
+    bound for the simulated network (diameter 2, generous constant)."""
+    cfg = SimConfig(num_leaves=4, hosts_per_leaf=4, num_spines=4,
+                    table_size=8192, seed=1)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(12)), 262144)])
+    r = sim.run()
+    assert r.correct
+    model = model_for(cfg, diameter=3)
+    # the model bounds bytes-per-allreduce-per-switch; allow 2x slack for
+    # burstiness the fluid model does not capture
+    assert r.max_descriptor_bytes <= 2.0 * model.occupancy_bytes

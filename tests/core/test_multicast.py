@@ -1,0 +1,70 @@
+"""Unit + property tests for the §4.2 shard-encoded multicast groups."""
+import random
+
+import pytest
+
+from repro.core.canary.multicast import (bitmap_to_ports, build_rule_table,
+                                         multicast_ports, num_rules,
+                                         ports_to_bitmap, shard_bitmap,
+                                         shard_to_ports)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def test_paper_example():
+    """§4.2's worked example: 8 ports, bitmap 00101101 -> shards 1|0010, 0|1101."""
+    bm = ports_to_bitmap([0, 2, 3, 5], 8)
+    assert bm == 0b00101101
+    shards = shard_bitmap(bm, 8, 2)
+    assert shards == [(0, 0b1101), (1, 0b0010)]
+    assert shard_to_ports(0, 0b1101, 8, 2) == [0, 2, 3]
+    assert shard_to_ports(1, 0b0010, 8, 2) == [5]
+    assert multicast_ports(bm, 8, 2) == [0, 2, 3, 5]
+
+
+def test_rule_count_matches_paper_formula():
+    """§4.2: 64-port switch with 4 shards -> 256Ki rules (vs 2^64)."""
+    assert num_rules(64, 4) == 4 * 2 ** 16 == 262144
+    assert num_rules(8, 2) == 2 * 2 ** 4
+
+
+def test_rule_table_small():
+    table = build_rule_table(8, 2)
+    assert len(table) == 2 * (2 ** 4 - 1)
+    assert table[(0, 0b1101)] == [0, 2, 3]
+    assert table[(1, 0b0010)] == [5]
+
+
+def test_roundtrip_exhaustive_8_ports():
+    for bm in range(256):
+        assert multicast_ports(bm, 8, 2) == bitmap_to_ports(bm)
+        assert multicast_ports(bm, 8, 4) == bitmap_to_ports(bm)
+
+
+def test_invalid_port_raises():
+    with pytest.raises(ValueError):
+        ports_to_bitmap([9], 8)
+    with pytest.raises(ValueError):
+        shard_bitmap(0b1, 10, 4)  # 10 % 4 != 0
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sets(st.integers(min_value=0, max_value=63)),
+           st.sampled_from([1, 2, 4, 8]))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_property_64_ports(ports, shards):
+        bm = ports_to_bitmap(sorted(ports), 64)
+        assert multicast_ports(bm, 64, shards) == sorted(ports)
+else:  # pragma: no cover
+    def test_roundtrip_random_64_ports():
+        rng = random.Random(0)
+        for _ in range(200):
+            ports = sorted(rng.sample(range(64), rng.randrange(0, 64)))
+            bm = ports_to_bitmap(ports, 64)
+            for shards in (1, 2, 4, 8):
+                assert multicast_ports(bm, 64, shards) == ports

@@ -1,0 +1,79 @@
+"""Paper §6 ("Support for other collectives"): reduce, broadcast, barrier
+built on the Canary machinery."""
+import pytest
+
+from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
+
+
+def cfg(**kw):
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4,
+                table_size=4096, seed=2, max_events=10_000_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_reduce_skips_broadcast():
+    """reduce: only the destination gets the sum; no broadcast traffic."""
+    c = cfg()
+    sim = Simulator(c, [AllreduceJob(0, list(range(8)), 32768,
+                                     collective="reduce", root=3)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    # no host-downlink broadcast storm: the only busy down-link is the root's
+    root_down = sim.net.host_down[3].bytes_sent
+    others = [sim.net.host_down[h].bytes_sent for h in range(8) if h != 3]
+    assert root_down > 0
+    assert all(b <= c.mtu_bytes * 4 for b in others)  # at most stray control
+
+
+def test_reduce_comparable_to_allreduce():
+    """A reduce skips the broadcast phase but funnels every block to one
+    destination host (no leader rotation), so it is not strictly faster —
+    it must be in the same ballpark and correct."""
+    c = cfg()
+    red = Simulator(c, [AllreduceJob(0, list(range(8)), 65536,
+                                     collective="reduce", root=0)],
+                    algo=Algo.CANARY).run()
+    allr = Simulator(cfg(), [AllreduceJob(0, list(range(8)), 65536)],
+                     algo=Algo.CANARY).run()
+    assert red.correct and allr.correct
+    assert red.duration_ns <= 1.5 * allr.duration_ns
+
+
+def test_broadcast_delivers_source_data():
+    """broadcast: every participant ends with the source's data."""
+    c = cfg()
+    sim = Simulator(c, [AllreduceJob(0, [1, 2, 5, 9, 12], 16384,
+                                     collective="broadcast", root=5)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct  # correct == every host got expected_total == source data
+
+
+def test_barrier_completes_with_header_packets():
+    c = cfg()
+    sim = Simulator(c, [AllreduceJob(0, list(range(12)), 0,
+                                     collective="barrier")],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.completed_blocks == 12  # one barrier block per participant view
+    # a barrier moves only header-sized packets: total bytes tiny
+    total = sum(l.bytes_sent for l in sim.net.all_links())
+    assert total < 12 * 6 * (c.header_bytes + 8 + c.mtu_bytes)
+
+
+def test_concurrent_mixed_collectives():
+    c = cfg(table_size=8192)
+    jobs = [
+        AllreduceJob(0, [0, 1, 2, 3], 16384),
+        AllreduceJob(1, [4, 5, 6, 7], 16384, collective="reduce", root=4),
+        AllreduceJob(2, [8, 9, 10, 11], 16384, collective="broadcast",
+                     root=8),
+        AllreduceJob(3, [12, 13, 14, 15], 0, collective="barrier"),
+    ]
+    sim = Simulator(c, jobs, algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert len(r.goodput_gbps) == 4

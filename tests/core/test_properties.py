@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator)
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+
+def _cfg(**kw):
+    base = dict(num_leaves=2, hosts_per_leaf=4, num_spines=2,
+                table_size=512, seed=0, max_events=5_000_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+if HAVE_HYP:
+    @given(
+        n_hosts=st.integers(2, 8),
+        blocks_bytes=st.integers(1, 8192),
+        timeout=st.floats(100.0, 5000.0),
+        seed=st.integers(0, 1000),
+        algo=st.sampled_from([Algo.CANARY, Algo.STATIC_TREE, Algo.RING]),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_allreduce_always_exact(n_hosts, blocks_bytes, timeout, seed, algo):
+        """Invariant: any parameterization yields exact sums at all hosts."""
+        cfg = _cfg(timeout_ns=timeout, seed=seed)
+        import random
+        rng = random.Random(seed)
+        parts = rng.sample(range(cfg.num_hosts), n_hosts)
+        sim = Simulator(cfg, [AllreduceJob(0, parts, blocks_bytes)], algo=algo)
+        r = sim.run()
+        assert r.correct
+
+    @given(
+        table=st.integers(1, 64),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_collisions_never_corrupt(table, seed):
+        """Invariant: however small the descriptor table (any collision
+        rate), tree restoration preserves exactness."""
+        cfg = _cfg(table_size=table, seed=seed)
+        sim = Simulator(cfg, [AllreduceJob(0, list(range(6)), 16384)],
+                        algo=Algo.CANARY)
+        r = sim.run()
+        assert r.correct
+
+    @given(drop=st.floats(0.0, 0.03), seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_losses_always_recovered(drop, seed):
+        cfg = _cfg(drop_prob=drop, retx_timeout_ns=4e4, seed=seed)
+        sim = Simulator(cfg, [AllreduceJob(0, list(range(5)), 8192)],
+                        algo=Algo.CANARY)
+        r = sim.run()
+        assert r.correct
+
+    @given(sizes=st.lists(st.integers(1024, 131072), min_size=2, max_size=3),
+           seed=st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_multitenant_isolation(sizes, seed):
+        """Concurrent tenants never corrupt each other's sums."""
+        cfg = _cfg(seed=seed, num_leaves=4, hosts_per_leaf=4, num_spines=4)
+        jobs = [AllreduceJob(a, list(range(a * 4, a * 4 + 4)), s)
+                for a, s in enumerate(sizes)]
+        sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+        r = sim.run()
+        assert r.correct
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_descriptor_bound_holds(seed):
+        """Descriptor occupancy stays within 2x the Little's-law bound."""
+        from repro.core.canary.memory_model import model_for
+        cfg = _cfg(seed=seed)
+        sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 65536)],
+                        algo=Algo.CANARY)
+        r = sim.run()
+        bound = model_for(cfg, diameter=3).occupancy_bytes
+        assert r.max_descriptor_bytes <= 2.0 * bound

@@ -1,0 +1,223 @@
+"""End-to-end behaviour tests for the Canary simulator (paper §3-§5).
+
+Every test asserts *numerical correctness* of the allreduce — the simulator
+carries exact integer payloads, so ``result.correct`` proves every participant
+received the true sum for every block.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               run_allreduce, scaled_config)
+
+
+def tiny_cfg(**kw):
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4,
+                table_size=4096, seed=11, max_events=20_000_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+@pytest.mark.parametrize("algo,n_trees", [
+    (Algo.CANARY, 1), (Algo.STATIC_TREE, 1), (Algo.STATIC_TREE, 4),
+    (Algo.RING, 1),
+])
+def test_allreduce_correct_no_congestion(algo, n_trees):
+    r = run_allreduce(tiny_cfg(), algo, 8, 32768, n_trees=n_trees,
+                      congestion=False, reps=1)
+    assert r.correct
+    assert r.goodput_gbps_mean > 0
+
+
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE, Algo.RING])
+def test_allreduce_correct_under_congestion(algo):
+    r = run_allreduce(tiny_cfg(), algo, 8, 32768, congestion=True, reps=1)
+    assert r.correct
+
+
+def test_canary_small_single_block():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, [0, 1], cfg.payload_bytes)],
+                    algo=Algo.CANARY)
+    assert sim.run().correct
+
+
+def test_participants_on_same_leaf():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, [0, 1, 2, 3], 8192)], algo=Algo.CANARY)
+    assert sim.run().correct
+
+
+def test_participants_spread_one_per_leaf():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, [0, 4, 8, 12], 8192)],
+                    algo=Algo.CANARY)
+    assert sim.run().correct
+
+
+def test_single_participant_degenerate():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, [3], 4096)], algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct and r.duration_ns == 0.0
+
+
+def test_stragglers_with_tiny_timeout_still_correct():
+    """§3.1.1: a too-short timeout creates stragglers but never wrong sums."""
+    cfg = tiny_cfg(timeout_ns=50.0)   # far below per-hop latency
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(12)), 65536)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.stragglers > 0
+
+
+def test_large_timeout_slower_but_correct():
+    slow = Simulator(tiny_cfg(timeout_ns=20000.0),
+                     [AllreduceJob(0, list(range(8)), 16384)], algo=Algo.CANARY)
+    fast = Simulator(tiny_cfg(timeout_ns=1000.0),
+                     [AllreduceJob(0, list(range(8)), 16384)], algo=Algo.CANARY)
+    rs, rf = slow.run(), fast.run()
+    assert rs.correct and rf.correct
+    # small allreduce: latency dominated by the timeout (§5.2.3)
+    assert rs.duration_ns > rf.duration_ns
+
+
+def test_collisions_trigger_tree_restoration():
+    """§3.2.1: with a 1-entry descriptor table every concurrent block beyond
+    the first collides; restoration must still deliver correct results."""
+    cfg = tiny_cfg(table_size=1)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 16384)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.collisions > 0
+    assert r.restorations > 0
+
+
+def test_collision_free_with_partitioned_table():
+    """§3.2.1/§6: statically partitioning the table across apps removes
+    cross-app collisions entirely when each partition is large enough."""
+    cfg = tiny_cfg(table_size=8192, partition_table=True)
+    jobs = [AllreduceJob(0, [0, 1, 2, 3], 8192),
+            AllreduceJob(1, [4, 5, 6, 7], 8192)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+
+
+def test_multitenancy_concurrent_apps():
+    """§3.4: concurrent allreduces of different applications coexist."""
+    cfg = tiny_cfg()
+    jobs = [AllreduceJob(a, list(range(a * 4, a * 4 + 4)), 16384)
+            for a in range(3)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert len(r.goodput_gbps) == 3
+    assert all(g > 0 for g in r.goodput_gbps.values())
+
+
+def test_packet_loss_recovered_by_retransmission():
+    """§3.3: iid packet drops are detected by host timers and repaired."""
+    cfg = tiny_cfg(drop_prob=0.01, retx_timeout_ns=5e4, seed=5)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 16384)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.dropped_packets > 0
+    assert r.retransmissions > 0
+
+
+def test_heavy_packet_loss_falls_back():
+    cfg = tiny_cfg(drop_prob=0.05, retx_timeout_ns=3e4, max_generations=2,
+                   seed=9)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(6)), 8192)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+
+
+def test_switch_failure_treated_as_loss():
+    """§3.3: a spine dying mid-run only costs retransmission of in-flight
+    blocks; the reduction completes without restarting from scratch."""
+    cfg = tiny_cfg(switch_fail_ns=2000.0, failed_switch=4 + 1,  # spine 1
+                   retx_timeout_ns=5e4, seed=3)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(10)), 32768)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.retransmissions > 0
+
+
+def test_noise_delays_still_correct():
+    """§5.2.5: sender-side OS noise delays packets; aggregation is best-effort
+    but the result is exact."""
+    cfg = tiny_cfg(noise_prob=0.10, noise_delay_ns=1000.0)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 32768)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+
+
+def test_descriptor_soft_state_is_freed():
+    """§3.2: descriptors are deallocated by the broadcast sweep; at the end of
+    a clean run no descriptor may linger."""
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 16384)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    leftover = sum(len(t) for t in sim.tables)
+    assert leftover == 0
+
+
+def test_memory_bound_independent_of_data_size():
+    """§3.2.2: descriptor high-water is bounded by the bandwidth-delay
+    product, not by the reduced-data size."""
+    cfg = tiny_cfg()
+    hw = []
+    for size in (16384, 65536, 262144):
+        sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), size)],
+                        algo=Algo.CANARY)
+        r = sim.run()
+        assert r.correct
+        hw.append(r.max_descriptors_per_switch)
+    # growing the data 16x must not grow the high-water 16x
+    assert hw[2] < 16 * hw[0] + 8
+
+
+def test_in_network_beats_ring_without_congestion():
+    """Fig. 2: in-network allreduce ~2x host-based ring."""
+    cfg = scaled_config(4, seed=2)
+    ring = run_allreduce(cfg, Algo.RING, 8, 262144, reps=1)
+    canary = run_allreduce(cfg, Algo.CANARY, 8, 262144, reps=1)
+    assert canary.correct and ring.correct
+    assert canary.goodput_gbps_mean > 1.5 * ring.goodput_gbps_mean
+
+
+def test_canary_beats_single_static_tree_under_congestion():
+    """Fig. 7/8: with background traffic Canary outperforms one static tree."""
+    cfg = scaled_config(8, seed=3)
+    st = run_allreduce(cfg, Algo.STATIC_TREE, 32, 524288, n_trees=1,
+                       congestion=True, reps=2)
+    ca = run_allreduce(cfg, Algo.CANARY, 32, 524288, congestion=True, reps=2)
+    assert ca.correct and st.correct
+    assert ca.goodput_gbps_mean > st.goodput_gbps_mean
+
+
+def test_static_tree_counters_exact():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(16)), 16384)],
+                    algo=Algo.STATIC_TREE, n_trees=2)
+    r = sim.run()
+    assert r.correct
+    assert r.stragglers == 0 and r.collisions == 0
+
+
+def test_ring_with_unaligned_sizes():
+    cfg = tiny_cfg()
+    sim = Simulator(cfg, [AllreduceJob(0, [0, 1, 2, 5, 9, 10, 14], 10000)],
+                    algo=Algo.RING)
+    assert sim.run().correct

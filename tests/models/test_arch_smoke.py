@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned architecture runs one forward + one train step + decode steps on
+CPU, asserting output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (decode_step, forward, get_config, init_cache,
+                          init_params, list_archs, prepare_cross_cache)
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=16):
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = 0.02 * jnp.ones((B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = 0.02 * jnp.ones((B, cfg.num_patches, cfg.d_model), dt)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, "smoke")
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    assert cfg.moe_experts <= 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    kw = {}
+    if "frames" in batch:
+        kw["frames"] = batch["frames"]
+    if "patches" in batch:
+        kw["extra_embeds"] = batch["patches"]
+    logits, aux = forward(params, batch["tokens"], cfg, **kw)
+    expect_s = batch["tokens"].shape[1] + (cfg.num_patches
+                                           if cfg.frontend == "vision_stub"
+                                           else 0)
+    assert logits.shape == (2, expect_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_decreases_loss(arch):
+    cfg = get_config(arch, "smoke")
+    tc = TrainConfig(model=cfg, optimizer=AdamWConfig(lr=1e-2))
+    step = jax.jit(make_train_step(tc))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    from repro.optim import init as adamw_init
+    opt = adamw_init(params, tc.optimizer)
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(5):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    # same batch repeated: loss must drop
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_steps(arch):
+    cfg = get_config(arch, "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B = 2
+    cache = init_cache(cfg, B, max_len=32)
+    if cfg.is_encoder_decoder:
+        frames = 0.02 * jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        cache["cross"] = prepare_cross_cache(params, frames, cfg)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(4):
+        logits, cache = decode_step(params, cache, tok, cfg)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert int(cache["pos"]) == 4
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact published sizes."""
+    import repro.configs as C
+    cases = {
+        "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14336, vocab_size=65536,
+                               moe_experts=16, moe_top_k=2),
+        "nemotron-4-340b": dict(num_layers=96, d_model=18432, num_heads=96,
+                                num_kv_heads=8, d_ff=73728,
+                                vocab_size=256000, activation="squared_relu"),
+        "deepseek-moe-16b": dict(num_layers=28, d_model=2048, num_heads=16,
+                                 num_kv_heads=16, moe_d_ff=1408,
+                                 vocab_size=102400, moe_experts=64,
+                                 moe_top_k=6, moe_shared_experts=2),
+        "glm4-9b": dict(num_layers=40, d_model=4096, num_heads=32,
+                        num_kv_heads=2, d_ff=13696, vocab_size=151552),
+        "qwen2-moe-a2.7b": dict(num_layers=24, d_model=2048, num_heads=16,
+                                num_kv_heads=16, moe_d_ff=1408,
+                                vocab_size=151936, moe_experts=60,
+                                moe_top_k=4, moe_shared_experts=4),
+        "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12,
+                            num_kv_heads=2, d_ff=8960, vocab_size=151936,
+                            rope_mode="mrope"),
+        "mamba2-130m": dict(num_layers=24, d_model=768, d_ff=0,
+                            vocab_size=50280, ssm_state=128),
+        "whisper-large-v3": dict(num_layers=32, encoder_layers=32,
+                                 d_model=1280, num_heads=20,
+                                 num_kv_heads=20, d_ff=5120,
+                                 vocab_size=51866),
+        "llama3.2-1b": dict(num_layers=16, d_model=2048, num_heads=32,
+                            num_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                         qkv_bias=True),
+    }
+    for arch, expect in cases.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+        assert cfg.source
+
+
+def test_jamba_interleave_pattern():
+    cfg = get_config("jamba-v0.1-52b")
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    assert kinds.count("attn") == 4      # 1:7 attn:mamba over 32 layers
+    assert kinds.count("ssm") == 28
+    moes = [cfg.layer_is_moe(i) for i in range(cfg.num_layers)]
+    assert sum(moes) == 16               # MoE every other layer
+
+
+def test_sliding_window_ring_buffer_matches_full_cache():
+    """Sliding-window decode with a ring buffer must equal full-cache decode
+    with a window mask (same window, same tokens)."""
+    cfg = get_config("llama3.2-1b", "smoke").with_(attn_chunk_threshold=1 << 30)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    W, T = 8, 20
+    swcfg = cfg.with_(sliding_window=W)
+    # reference: full cache, sliding-window masking in full_attention happens
+    # only for prefill; emulate by decoding with a big cache and comparing
+    # the final step against ring-buffer decode.
+    ring = init_cache(swcfg, 1, max_len=T)          # C = W ring buffer
+    assert ring["layers"][0]["k"].shape[2] == W
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+    lr = None
+    for t in range(T):
+        lr, ring = decode_step(params, ring, toks[:, t:t + 1], swcfg)
+    # reference: bulk forward over the full sequence with window *masking*
+    # (the receptive field grows with depth, so the reference must see the
+    # whole sequence, not just the last W tokens)
+    logits_ref, _ = forward(params, toks, swcfg)
+    got = np.asarray(lr[:, -1], np.float32)
+    want = np.asarray(logits_ref[:, -1], np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

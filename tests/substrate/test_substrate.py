@@ -1,0 +1,164 @@
+"""Unit tests: optimizer, schedules, data pipeline, losses, checkpointing,
+serving engine, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, batch_at
+from repro.models import get_config, init_params
+from repro.optim import (AdamWConfig, cosine_with_warmup, global_norm, init,
+                         update)
+from repro.train.losses import cross_entropy
+
+
+# ----------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([[3.0, -2.0]])}
+    state = init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, state, _ = update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_grad_clip_and_metrics():
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0)
+    params = {"w": jnp.ones((4, 4))}
+    state = init(params, cfg)
+    grads = {"w": 1e6 * jnp.ones((4, 4))}
+    new_params, state, m = update(grads, state, params, cfg)
+    assert m["grad_norm"] > 1e6
+    # clipped: the step must be bounded
+    assert float(jnp.abs(new_params["w"] - params["w"]).max()) < 0.1
+
+
+def test_adamw_bf16_states():
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = init(params, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    _, state2, _ = update(grads, state, params, cfg)
+    assert state2.v["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule():
+    s = cosine_with_warmup(1.0, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.array(0))) == 0.0
+    assert abs(float(s(jnp.array(10))) - 1.0) < 1e-6
+    assert float(s(jnp.array(100))) <= 0.11
+    assert float(s(jnp.array(55))) < float(s(jnp.array(20)))
+
+
+# ----------------------------------------------------------------------- data
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, global_batch=8, seq_len=32, seed=3)
+    b1 = batch_at(cfg, 5)
+    b2 = batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_at(cfg, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 1000
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_shard_slices_compose():
+    cfg = DataConfig(vocab_size=512, global_batch=8, seq_len=16)
+    full = batch_at(cfg, 0)["tokens"]
+    lo = batch_at(cfg, 0, batch_slice=(0, 4))["tokens"]
+    hi = batch_at(cfg, 0, batch_slice=(4, 8))["tokens"]
+    np.testing.assert_array_equal(np.concatenate([lo, hi]), full)
+
+
+# --------------------------------------------------------------------- losses
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 16)
+    loss, metrics = cross_entropy(logits, labels)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    want = -np.take_along_axis(np.asarray(lp), np.asarray(labels)[..., None],
+                               axis=-1).mean()
+    np.testing.assert_allclose(float(loss), want, rtol=1e-5)
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+def test_cross_entropy_uniform_is_logV():
+    logits = jnp.zeros((1, 4, 128))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    loss, _ = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(128), rtol=1e-5)
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+    cfg = get_config("llama3.2-1b", "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig()
+    opt = init(params, ocfg)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, params, opt)
+    assert latest_step(d) == 7
+    like_p = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    like_o = jax.tree.map(lambda x: jnp.zeros_like(x), opt)
+    rp, ro, step = restore_checkpoint(d, 7, like_p, like_o)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rp)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, {"w": jnp.ones((5,))})
+
+
+# -------------------------------------------------------------------- serving
+def test_engine_generate_and_determinism():
+    from repro.serving import Engine, ServeConfig
+    cfg = get_config("llama3.2-1b", "smoke")
+    eng = Engine(ServeConfig(model=cfg, batch=2, max_len=64))
+    prompts = jax.random.randint(jax.random.PRNGKey(0), (2, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    toks, stats = eng.generate(prompts, new_tokens=8)
+    assert toks.shape == (2, 8)
+    eng2 = Engine(ServeConfig(model=cfg, batch=2, max_len=64))
+    toks2, _ = eng2.generate(prompts, new_tokens=8)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+
+
+# ------------------------------------------------------------------- sharding
+def test_param_specs_divisibility_guards():
+    from jax.sharding import PartitionSpec as P
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.sharding import leaf_spec
+    # divisible: heads go to model
+    s = leaf_spec("wq", (2, 2048, 32, 64), stacked=True, mesh=mesh,
+                  fsdp="data", model="model")
+    assert s == P(None, "data", "model", None)
+    # mesh=1 always divides; simulate non-divisible by a fake mesh via shape
+    mesh16 = jax.make_mesh((1, 1), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # rule sanity: norm scales replicate
+    s = leaf_spec("scale", (2, 256), stacked=True, mesh=mesh, fsdp="data",
+                  model="model")
+    assert s == P(None)
+
+
+def test_batch_spec_fallbacks():
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import batch_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert batch_spec(mesh, 8, "data") == P("data")
+    assert batch_spec(mesh, 1, "data") == P("data")  # 1 % 1 == 0
