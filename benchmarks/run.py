@@ -1,11 +1,15 @@
 """Benchmark suite entry point — one module per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV rows. Environment knobs:
+Prints ``name,us_per_call,derived`` CSV rows and, at the end, writes a
+machine-readable JSON document (per-suite wall-clock timings + every CSV row)
+so the bench trajectory can be tracked across PRs. Environment knobs:
 BENCH_FAST=1 (CI smoke), BENCH_PAPER_SCALE=1 (the paper's 1024-host network
-and 4 MiB messages — slow), BENCH_ONLY=fig7 (comma-list filter).
+and 4 MiB messages — slow), BENCH_ONLY=fig7 (comma-list filter),
+BENCH_JSON=path (JSON output location, default BENCH_RESULTS.json).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -13,10 +17,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (collective_bench, fig2_overview, fig6_single_switch,
+    from . import (collective_bench, common, fig2_overview, fig6_single_switch,
                    fig7_static_vs_canary, fig8_congestion_intensity,
                    fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,
-                   mem_model, roofline)
+                   mem_model, roofline, sweep)
     suites = {
         "fig2": fig2_overview.main,
         "fig6": fig6_single_switch.main,
@@ -28,6 +32,9 @@ def main() -> None:
         "mem_model": mem_model.main,
         "collective": collective_bench.main,
         "roofline": roofline.main,
+        "sweep": lambda: sweep.main(["--suite", "fig7", "--reps", "1",
+                                     "--out", os.environ.get(
+                                         "SWEEP_JSON", "sweep_fig7.json")]),
     }
     only = os.environ.get("BENCH_ONLY")
     if only:
@@ -35,6 +42,7 @@ def main() -> None:
         suites = {k: v for k, v in suites.items() if k in keep}
     print("name,us_per_call,derived")
     failures = []
+    timings = {}
     for name, fn in suites.items():
         t0 = time.time()
         try:
@@ -42,8 +50,22 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+        timings[name] = round(time.time() - t0, 3)
+        print(f"# {name} done in {timings[name]:.1f}s", file=sys.stderr,
               flush=True)
+    doc = {
+        "suite_seconds": timings,
+        "failed_suites": failures,
+        "rows": [dict(zip(("name", "us_per_call", "derived"),
+                          row.split(",", 2))) for row in common.ROWS],
+        "env": {k: os.environ.get(k) for k in
+                ("BENCH_FAST", "BENCH_PAPER_SCALE", "BENCH_ONLY")},
+    }
+    json_path = os.environ.get("BENCH_JSON", "BENCH_RESULTS.json")
+    with open(json_path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {json_path}", file=sys.stderr, flush=True)
     if failures:
         print(f"# FAILED suites: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,188 @@
+"""Parallel sweep runner: fan simulation configs/seeds across CPU cores.
+
+Figure suites are embarrassingly parallel — every (algorithm, congestion,
+seed) cell is an independent ``Simulator`` run — but the per-figure scripts
+run them serially, which is what makes the paper-scale (1024-host) sweeps
+intractable on one core. This runner expands a named sweep into a work list,
+executes it on a ``multiprocessing`` pool, and writes machine-readable JSON
+(per-cell results + per-label aggregates + wall-clock/speedup accounting).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.sweep --suite fig7 --procs 8 \
+        --out sweep_fig7.json
+    PYTHONPATH=src python -m benchmarks.sweep --suite fig7 --procs 0   # serial
+
+Suites honour the same env knobs as the rest of the benchmark suite
+(``BENCH_FAST=1``, ``BENCH_PAPER_SCALE=1``). ``--topology three_tier`` runs
+the same sweep on the 3-tier folded Clos.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import multiprocessing as mp
+import os
+import statistics
+import sys
+import time
+from typing import Dict, List
+
+
+def _default_procs() -> int:
+    return max(1, (os.cpu_count() or 2) - 1)
+
+
+# --------------------------------------------------------------------------
+# Work items (must be picklable: plain dicts in, plain dicts out)
+# --------------------------------------------------------------------------
+def _base_cfg(topology: str):
+    from repro.core.canary import three_tier_config
+
+    from .common import bench_cfg
+    if topology == "three_tier":
+        return three_tier_config(num_pods=4, leaves_per_pod=2,
+                                 hosts_per_leaf=8, aggs_per_pod=2, num_cores=4)
+    if topology != "fat_tree":
+        raise SystemExit(f"unknown topology {topology!r} "
+                         "(have: fat_tree, three_tier)")
+    return bench_cfg()
+
+
+def expand_suite(suite: str, topology: str, reps: int) -> List[dict]:
+    """Expand a named sweep into independent work-item dicts."""
+    from .common import bench_size
+    cfg = _base_cfg(topology)
+    n = max(2, int(cfg.num_hosts * 0.5))  # 50% participants, like bench_hosts
+    size = bench_size()
+    items: List[dict] = []
+    if suite == "fig7":
+        # static 1/2/4/8 trees vs canary, with and without congestion
+        cells = [("static1", "static_tree", 1), ("static2", "static_tree", 2),
+                 ("static4", "static_tree", 4), ("static8", "static_tree", 8),
+                 ("canary", "canary", 1)]
+        for cong in (False, True):
+            for label, algo, nt in cells:
+                for rep in range(reps):
+                    items.append(dict(label=f"{label}/cong={int(cong)}",
+                                      algo=algo, n_trees=nt, congestion=cong,
+                                      num_hosts=n, data_bytes=size, rep=rep))
+    elif suite == "fig8":
+        # goodput vs fraction of hosts running the allreduce, the rest
+        # generating congestion (same axis as benchmarks/fig8_*.py)
+        for frac in (0.05, 0.25, 0.5, 0.75):
+            nf = max(2, int(cfg.num_hosts * frac))
+            for algo in ("static_tree", "canary"):
+                for rep in range(reps):
+                    items.append(dict(label=f"{algo}/hosts={int(frac * 100)}%",
+                                      algo=algo, n_trees=1, congestion=True,
+                                      num_hosts=nf, data_bytes=size, rep=rep))
+    elif suite == "lb":
+        # load-balancing policy sensitivity under congestion
+        for lb in ("ecmp", "adaptive", "per_packet"):
+            for rep in range(reps):
+                items.append(dict(label=f"canary/lb={lb}", algo="canary",
+                                  n_trees=1, congestion=True, lb=lb,
+                                  num_hosts=n, data_bytes=size, rep=rep))
+    else:
+        raise SystemExit(f"unknown sweep suite {suite!r} (have: fig7, fig8, lb)")
+    for it in items:
+        it["topology"] = topology
+        it["cfg"] = dataclasses.asdict(cfg)
+    return items
+
+
+def run_item(item: dict) -> dict:
+    """Execute one sweep cell (runs in a worker process)."""
+    from repro.core.canary import Algo, SimConfig, run_allreduce
+    cfg = SimConfig(**item["cfg"])
+    if "lb" in item:
+        cfg = dataclasses.replace(cfg, lb=item["lb"])
+    t0 = time.perf_counter()
+    # rep0 makes sweep cell r identical to rep r of a serial
+    # run_allreduce(reps=R) call — one rep per work item, so the pool
+    # load-balances cells, not whole experiments
+    res = run_allreduce(cfg, Algo(item["algo"]), item["num_hosts"],
+                        item["data_bytes"], n_trees=item["n_trees"],
+                        congestion=item["congestion"], reps=1,
+                        rep0=item["rep"])
+    wall = time.perf_counter() - t0
+    return dict(label=item["label"], rep=item["rep"],
+                goodput_gbps=res.goodput_gbps_mean,
+                runtime_us=res.runtime_us_mean,
+                avg_utilization=res.avg_utilization,
+                correct=res.correct,
+                events=res.reps[0].events,
+                wall_s=wall)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+def run_sweep(suite: str, topology: str = "fat_tree", reps: int = 2,
+              procs: int = 0) -> dict:
+    """Run a sweep; ``procs=0`` means serial (in-process), ``procs>=1`` uses a
+    worker pool. Returns the JSON-ready result document."""
+    items = expand_suite(suite, topology, reps)
+    t0 = time.perf_counter()
+    if procs and procs > 1:
+        ctx = mp.get_context("fork" if sys.platform == "linux" else "spawn")
+        with ctx.Pool(processes=procs) as pool:
+            cells = pool.map(run_item, items, chunksize=1)
+    else:
+        cells = [run_item(it) for it in items]
+    wall = time.perf_counter() - t0
+    by_label: Dict[str, List[dict]] = {}
+    for c in cells:
+        by_label.setdefault(c["label"], []).append(c)
+    aggregates = {
+        label: dict(
+            goodput_gbps_mean=statistics.mean(c["goodput_gbps"] for c in cs),
+            runtime_us_mean=statistics.mean(c["runtime_us"] for c in cs),
+            correct=all(c["correct"] for c in cs),
+            reps=len(cs),
+        )
+        for label, cs in sorted(by_label.items())
+    }
+    cpu_s = sum(c["wall_s"] for c in cells)
+    return dict(
+        suite=suite, topology=topology, reps=reps, procs=procs,
+        cells=len(cells), wall_s=wall, cpu_s=cpu_s,
+        speedup=(cpu_s / wall) if wall > 0 else 0.0,
+        correct=all(c["correct"] for c in cells),
+        aggregates=aggregates,
+        results=cells,
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", default="fig7", help="fig7 | fig8 | lb")
+    ap.add_argument("--topology", default="fat_tree",
+                    help="fat_tree | three_tier")
+    ap.add_argument("--reps", type=int,
+                    default=int(os.environ.get("SWEEP_REPS", "2")))
+    ap.add_argument("--procs", type=int, default=_default_procs(),
+                    help="worker processes (0/1 = serial)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+    doc = run_sweep(args.suite, args.topology, args.reps, args.procs)
+    out = args.out or f"sweep_{args.suite}_{args.topology}.json"
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"# {doc['cells']} cells in {doc['wall_s']:.1f}s wall "
+          f"({doc['cpu_s']:.1f}s cpu, {doc['speedup']:.1f}x speedup, "
+          f"procs={args.procs}) correct={doc['correct']} -> {out}",
+          file=sys.stderr)
+    from .common import emit
+    for label, agg in doc["aggregates"].items():
+        # emit() also records the row for run.py's BENCH_RESULTS.json
+        emit(f"sweep/{args.suite}/{label}", agg["runtime_us_mean"],
+             f"goodput_gbps={agg['goodput_gbps_mean']:.1f};"
+             f"correct={agg['correct']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Version compatibility shims.
+
+The codebase targets the current JAX API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``), but must
+also run on older toolchains (down to jax 0.4.x / Python 3.10) where those
+names either do not exist or live under ``jax.experimental``. Rather than
+sprinkling feature checks through every call site, :func:`patch_jax` installs
+forward-compatible aliases once, at ``repro`` import time:
+
+* ``jax.sharding.AxisType`` — stubbed enum when missing (the values are only
+  ever forwarded to ``make_mesh``, which the wrapper below ignores on old
+  versions).
+* ``jax.make_mesh`` — wrapped to accept and drop ``axis_types`` when the
+  installed signature predates it.
+* ``jax.shard_map`` — aliased to ``jax.experimental.shard_map.shard_map`` with
+  ``check_vma`` translated to the old ``check_rep`` spelling.
+
+Pure Python stdlib gaps (e.g. ``enum.StrEnum`` on 3.10) are handled locally in
+the modules that need them, not here.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+_PATCHED = False
+
+
+def patch_jax() -> None:
+    """Install forward-compat aliases onto the ``jax`` package (idempotent).
+
+    A no-op when jax is missing entirely (the simulator core has no jax
+    dependency) or already new enough.
+    """
+    global _PATCHED
+    if _PATCHED:
+        return
+    _PATCHED = True
+    try:
+        import jax
+        import jax.sharding
+    except ImportError:  # simulator-only environments
+        return
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    _orig_make_mesh = getattr(jax, "make_mesh", None)
+    try:
+        params = inspect.signature(_orig_make_mesh).parameters \
+            if _orig_make_mesh is not None else {}
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        params = {}
+    if _orig_make_mesh is not None and "axis_types" not in params:
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(*args, axis_types=None, **kwargs):
+            del axis_types  # pre-AxisType meshes are implicitly Auto
+            return _orig_make_mesh(*args, **kwargs)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax import core as _core
+
+        def _one_axis_size(a):
+            frame = _core.axis_frame(a)
+            # 0.4.3x returns the size directly; earlier versions a frame object
+            return frame if isinstance(frame, int) else frame.size
+
+        def axis_size(axis_name):
+            """Static size of a bound mapped axis (new-jax ``lax.axis_size``)."""
+            if isinstance(axis_name, (tuple, list)):
+                n = 1
+                for a in axis_name:
+                    n *= _one_axis_size(a)
+                return n
+            return _one_axis_size(axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *args, check_vma=None, axis_names=None, **kwargs):
+            if check_vma is not None and "check_rep" not in kwargs:
+                kwargs["check_rep"] = check_vma
+            if axis_names is not None and "auto" not in kwargs:
+                # new API: manual over ``axis_names`` only; old API spells the
+                # complement via ``auto``
+                mesh = kwargs.get("mesh") or (args[0] if args else None)
+                if mesh is not None:
+                    kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+            return _shard_map(f, *args, **kwargs)
+
+        jax.shard_map = shard_map

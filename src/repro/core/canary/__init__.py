@@ -1,15 +1,36 @@
-"""Faithful packet-level reproduction of Canary (§3-§5 of the paper)."""
+"""Faithful packet-level reproduction of Canary (§3-§5 of the paper).
+
+Layered architecture (see ``ARCHITECTURE.md``): ``engine`` (event loop) /
+``topology`` + ``network`` (fabrics) / ``switch`` (dataplane + algorithm
+registry) / ``hostproto`` (host protocol) / ``workloads`` (disturbance
+models), behind the :class:`Simulator` facade.
+"""
 from .algorithms import ExperimentResult, compare_algorithms, run_allreduce
+from .engine import EventLoop
+from .hostproto import HostProtocol, RingStrategy
 from .memory_model import OccupancyModel, model_for, paper_example
+from .network import FatTree
 from .simulator import Simulator, contribution
+from .switch import (ALGORITHMS, AggregationStrategy, CanaryStrategy,
+                     StaticTreeStrategy, SwitchLayer, make_strategy,
+                     register_algorithm)
+from .topology import (TOPOLOGIES, Link, ThreeTierFatTree, Topology,
+                       make_topology, register_topology)
 from .types import (Algo, AllreduceJob, Descriptor, LoadBalancing, Packet,
                     PacketKind, SimConfig, SimResult, block_key, id_app,
-                    id_block, id_gen, make_id, paper_config, scaled_config)
+                    id_block, id_gen, make_id, paper_config, scaled_config,
+                    three_tier_config)
+from .workloads import CongestionWorkload
 
 __all__ = [
-    "Algo", "AllreduceJob", "Descriptor", "ExperimentResult", "LoadBalancing",
-    "OccupancyModel", "Packet", "PacketKind", "SimConfig", "SimResult",
-    "Simulator", "block_key", "compare_algorithms", "contribution", "id_app",
-    "id_block", "id_gen", "make_id", "model_for", "paper_example",
-    "paper_config", "run_allreduce", "scaled_config",
+    "ALGORITHMS", "Algo", "AllreduceJob", "AggregationStrategy",
+    "CanaryStrategy", "CongestionWorkload", "Descriptor", "EventLoop",
+    "ExperimentResult", "FatTree", "HostProtocol", "Link", "LoadBalancing",
+    "OccupancyModel", "Packet", "PacketKind", "RingStrategy", "SimConfig",
+    "SimResult", "Simulator", "StaticTreeStrategy", "SwitchLayer",
+    "TOPOLOGIES", "ThreeTierFatTree", "Topology", "block_key",
+    "compare_algorithms", "contribution", "id_app", "id_block", "id_gen",
+    "make_id", "make_strategy", "make_topology", "model_for", "paper_example",
+    "paper_config", "register_algorithm", "register_topology",
+    "run_allreduce", "scaled_config", "three_tier_config",
 ]

@@ -50,12 +50,18 @@ def run_allreduce(cfg: SimConfig,
                   congestion: bool = False,
                   num_apps: int = 1,
                   reps: int = 1,
+                  rep0: int = 0,
                   partition_hosts: bool = True) -> ExperimentResult:
     """Run ``num_apps`` concurrent allreduces over ``num_allreduce_hosts`` total
     hosts (equally partitioned), optionally with all remaining hosts generating
-    random-uniform congestion traffic (§5.2)."""
+    random-uniform congestion traffic (§5.2).
+
+    ``rep0`` offsets the repetition index: ``reps=1, rep0=r`` reproduces rep
+    ``r`` of a ``reps=r+1`` call exactly, which is how the parallel sweep
+    runner (``benchmarks/sweep.py``) splits an experiment into independent
+    per-rep work items without changing its results."""
     results: List[SimResult] = []
-    for rep in range(reps):
+    for rep in range(rep0, rep0 + reps):
         rng = random.Random(cfg.seed * 1000003 + rep)
         chosen = pick_hosts(cfg, num_allreduce_hosts, rng)
         per_app = max(2, num_allreduce_hosts // num_apps)

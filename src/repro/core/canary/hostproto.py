@@ -1,0 +1,402 @@
+"""Host protocol layer: send pump, leader recovery, retransmission.
+
+Everything a *host* NIC/CPU does lives here (see ``ARCHITECTURE.md``):
+
+* :class:`HostProtocol` — per-host send queues and the pump (one in-flight
+  packet per NIC, rescheduled at line rate), block-completion accounting, and
+  the Canary leader role: final aggregation (§3.1.4), broadcast +
+  tree-restoration kickoff (§3.2.1), loss recovery and generation management
+  (§3.3).
+* :class:`RingStrategy` — the host-based ring allreduce baseline. It is an
+  :class:`~.switch.AggregationStrategy` like CANARY/STATIC_TREE, registered
+  in the same registry; switches simply forward its packets (the base-class
+  default), which is precisely what makes it "host-based".
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set, Tuple
+
+from .engine import EV_LEADER_DONE, EV_PUMP, EV_RETX
+from .switch import AggregationStrategy, register_algorithm
+from .types import (Algo, GEN_BITS, Packet, PacketKind, id_app, id_block,
+                    id_gen, make_id)
+
+_MAX_GEN = (1 << GEN_BITS) - 1
+
+
+class _HostState:
+    __slots__ = ("queue", "pending", "pump_scheduled", "noise_peer",
+                 "noise_remaining", "noise_msg_idx", "send_cursor")
+
+    def __init__(self) -> None:
+        self.queue: Deque[Packet] = deque()
+        self.pending: Optional[Packet] = None
+        self.pump_scheduled = False
+        self.noise_peer = -1
+        self.noise_remaining = 0
+        self.noise_msg_idx = 0
+        # lazy cursor over this host's allreduce contributions: [app, next_block]
+        self.send_cursor: List[List[int]] = []
+
+
+class _LeaderState:
+    __slots__ = ("value", "counter", "gen", "restorations", "done",
+                 "last_fail_ns", "pending_done")
+
+    def __init__(self) -> None:
+        self.value = 0
+        self.counter = 0
+        self.gen = 0
+        self.restorations: List[Tuple[int, int]] = []
+        self.done = False
+        self.pending_done = False
+        self.last_fail_ns = -1e18
+
+
+class HostProtocol:
+    """Per-host send machinery + the leader/reliability protocol."""
+
+    def __init__(self, sim, num_hosts: int):
+        self.sim = sim
+        self.hosts = [_HostState() for _ in range(num_hosts)]
+        self.host_gen: Dict[Tuple[int, int, int], int] = {}  # (host, app, block)
+        self.leader_state: Dict[Tuple[int, int], _LeaderState] = {}
+        self.completed_total: Dict[Tuple[int, int], int] = {}
+        self.fallback_blocks: Set[Tuple[int, int]] = set()
+
+    # ------------------------------------------------------------ send pump
+    def schedule_pump(self, host: int, t: float) -> None:
+        hs = self.hosts[host]
+        if not hs.pump_scheduled:
+            hs.pump_scheduled = True
+            self.sim.engine.push(t, EV_PUMP, host, 0, None)
+
+    def _next_host_packet(self, host: int) -> Optional[Packet]:
+        sim = self.sim
+        hs = self.hosts[host]
+        if hs.queue:
+            return hs.queue.popleft()
+        pkt = sim.strategy.next_host_packet(host)
+        if pkt is not None:
+            return pkt
+        return sim.workload.next_noise_packet(host, hs)
+
+    def pump(self, host: int) -> None:
+        sim = self.sim
+        hs = self.hosts[host]
+        if sim.all_done():
+            return
+        pkt = hs.pending
+        hs.pending = None
+        if pkt is None:
+            pkt = self._next_host_packet(host)
+            if pkt is None:
+                return
+            # §5.2.5 sender-side OS noise: delay this send with probability p.
+            delay = sim.workload.sender_delay_ns(host)
+            if delay is not None:
+                hs.pending = pkt
+                hs.pump_scheduled = True
+                sim.engine.push(sim.now + delay, EV_PUMP, host, 0, None)
+                return
+        nic_free = sim.net.send_from_host(sim, host, pkt)
+        hs.pump_scheduled = True
+        sim.engine.push(nic_free, EV_PUMP, host, 0, None)
+
+    # ----------------------------------------------------------- completion
+    def complete_at_host(self, host: int, app: int, block: int,
+                         value: int) -> None:
+        sim = self.sim
+        flags = sim.have.get((app, host))
+        if flags is None or flags[block]:
+            return
+        flags[block] = 1
+        if value != sim.expected_total(app, block):
+            sim.mismatches += 1
+        sim.app_remaining[app] -= 1
+        sim.completed_blocks += 1
+        if sim.app_remaining[app] == 0:
+            sim.app_done_ns[app] = sim.now
+
+    # ---------------------------------------------------------- leader role
+    def leader_block_done(self, host: int, app: int, block: int,
+                          total: int) -> None:
+        sim = self.sim
+        key = (app, block)
+        st = self.leader_state.get(key)
+        if st is None or st.done:
+            return
+        st.done = True
+        self.completed_total[key] = total
+        self.complete_at_host(host, app, block, total)
+        if sim.jobs[app].collective == "reduce":
+            return  # §6: a reduce skips the broadcast phase entirely
+        pid = make_id(app, block, st.gen)
+        cfg = sim.cfg
+        if key in self.fallback_blocks:
+            # host-based fallback (§3.3): no descriptors exist — unicast result
+            for h in sim.leaders[app]:
+                if h == host:
+                    continue
+                up = Packet(kind=PacketKind.UNICAST_DATA, dest=h, id=pid,
+                            value=total, size_bytes=cfg.mtu_bytes, src=host)
+                self.hosts[host].queue.append(up)
+        else:
+            # broadcast down the recorded tree (§3.1.2)
+            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pid, value=total,
+                        multicast=True, size_bytes=cfg.mtu_bytes)
+            self.hosts[host].queue.append(bc)
+            # tree restoration for collided subtrees (§3.2.1)
+            by_switch: Dict[int, List[int]] = {}
+            for sw_addr, port in st.restorations:
+                by_switch.setdefault(sw_addr, []).append(port)
+            for sw_addr, ports in by_switch.items():
+                sim.restorations += 1
+                rp = Packet(kind=PacketKind.RESTORE, dest=-1, id=pid,
+                            value=total, dest_switch=sw_addr,
+                            restore_ports=tuple(set(ports)),
+                            size_bytes=cfg.mtu_bytes)
+                self.hosts[host].queue.append(rp)
+        self.schedule_pump(host, sim.now)
+
+    # --------------------------------------------------------- host arrival
+    def arrive(self, host: int, pkt: Packet) -> None:
+        sim = self.sim
+        kind = pkt.kind
+        if kind == PacketKind.NOISE:
+            return
+        if sim.strategy.on_host_packet(host, pkt):
+            return
+        app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
+        if kind == PacketKind.REDUCE:
+            if sim.leader_of(app, block) != host:
+                return
+            key = (app, block)
+            st = self.leader_state.setdefault(key, _LeaderState())
+            if st.done or st.pending_done or gen != st.gen:
+                return  # stale generation or already reduced
+            st.value += pkt.value
+            st.counter += pkt.counter
+            if pkt.switch_addr >= 0:
+                st.restorations.append((pkt.switch_addr, pkt.port_stamp))
+            if st.counter >= len(sim.leaders[app]) - 1:
+                total = st.value + sim.contribution_of(app, block, host)
+                st.pending_done = True
+                # leader-side aggregation cost r (§3.2.2)
+                sim.engine.push(sim.now + sim.cfg.leader_aggregate_ns,
+                                EV_LEADER_DONE, host, 0, (app, block, total))
+            return
+        if kind in (PacketKind.BCAST, PacketKind.UNICAST_DATA):
+            self.complete_at_host(host, app, block, pkt.value)
+            return
+        if kind == PacketKind.RETX_REQ:
+            self.leader_handle_retx(host, app, block, pkt.src)
+            return
+        if kind == PacketKind.FAIL:
+            self.host_handle_fail(host, pkt)
+            return
+
+    # ----------------------------------------------------------- reliability
+    def leader_handle_retx(self, leader: int, app: int, block: int,
+                           requester: int) -> None:
+        sim = self.sim
+        cfg = sim.cfg
+        key = (app, block)
+        total = self.completed_total.get(key)
+        if total is not None:
+            # loss was in the broadcast phase: retransmit reduced data (§3.3)
+            up = Packet(kind=PacketKind.UNICAST_DATA, dest=requester,
+                        id=make_id(app, block, 0), value=total,
+                        size_bytes=cfg.mtu_bytes, src=leader)
+            self.hosts[leader].queue.append(up)
+            self.schedule_pump(leader, sim.now)
+            return
+        st = self.leader_state.setdefault(key, _LeaderState())
+        if st.pending_done:
+            return  # completion already in flight
+        if sim.now - st.last_fail_ns < cfg.retx_timeout_ns / 2:
+            return  # debounce: a failure round is already in flight
+        st.last_fail_ns = sim.now
+        newgen = min(st.gen + 1, _MAX_GEN)
+        fallback = newgen >= cfg.max_generations
+        if fallback and key not in self.fallback_blocks:
+            sim.fallbacks += 1
+            self.fallback_blocks.add(key)
+        st.gen = newgen
+        st.value = 0
+        st.counter = 0
+        st.restorations = []
+        # "the leader broadcasts a failure message" (§3.3) — delivered unicast
+        for h in sim.leaders[app]:
+            if h == leader:
+                continue
+            fl = Packet(kind=PacketKind.FAIL, dest=h,
+                        id=make_id(app, block, newgen),
+                        counter=1 if fallback else 0,
+                        size_bytes=cfg.header_bytes + 16, src=leader)
+            self.hosts[leader].queue.append(fl)
+        self.schedule_pump(leader, sim.now)
+
+    def host_handle_fail(self, host: int, pkt: Packet) -> None:
+        sim = self.sim
+        cfg = sim.cfg
+        app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
+        hkey = (host, app, block)
+        if self.host_gen.get(hkey, 0) >= gen:
+            return
+        flags = sim.have.get((app, host))
+        if flags is not None and flags[block]:
+            return
+        self.host_gen[hkey] = gen
+        sim.retransmissions += 1
+        fallback = pkt.counter == 1
+        rp = Packet(kind=PacketKind.REDUCE, dest=sim.leader_of(app, block),
+                    id=make_id(app, block, gen), counter=1,
+                    hosts=len(sim.leaders[app]),
+                    value=sim.contribution_of(app, block, host),
+                    bypass=fallback, size_bytes=cfg.mtu_bytes, src=host)
+        self.hosts[host].queue.append(rp)
+        sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
+                        (app, block, gen))
+        self.schedule_pump(host, sim.now)
+
+    def host_retx_check(self, host: int, app: int, block: int,
+                        gen: int) -> None:
+        sim = self.sim
+        cfg = sim.cfg
+        if sim.all_done():
+            return
+        flags = sim.have.get((app, host))
+        if flags is None or flags[block]:
+            return
+        if self.host_gen.get((host, app, block), 0) > gen:
+            return  # a newer generation is already in flight
+        sim.retransmissions += 1
+        req = Packet(kind=PacketKind.RETX_REQ, dest=sim.leader_of(app, block),
+                     id=make_id(app, block, gen),
+                     size_bytes=cfg.header_bytes + 16, src=host)
+        self.hosts[host].queue.append(req)
+        sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
+                        (app, block, gen))
+        self.schedule_pump(host, sim.now)
+
+
+# --------------------------------------------------------------------------
+# Host-based ring allreduce — same registry as the in-network strategies
+# --------------------------------------------------------------------------
+class _RingState:
+    """Per-app ring-allreduce bookkeeping."""
+
+    __slots__ = ("order", "rank", "p", "chunk_vals", "recv_count", "steps",
+                 "pkts_per_chunk", "chunk_bytes", "done_steps")
+
+    def __init__(self, order: List[int], data_bytes: int, payload: int) -> None:
+        self.order = order
+        self.rank = {h: r for r, h in enumerate(order)}
+        self.p = len(order)
+        self.chunk_bytes = max(1, -(-data_bytes // self.p))
+        self.pkts_per_chunk = max(1, -(-self.chunk_bytes // payload))
+        self.steps = 2 * self.p - 2
+        self.chunk_vals: List[List[int]] = []
+        self.recv_count: List[Dict[int, int]] = []
+        self.done_steps: List[int] = []
+
+
+@register_algorithm(Algo.RING)
+class RingStrategy(AggregationStrategy):
+    """Bandwidth-optimal host-based ring: reduce-scatter + all-gather.
+
+    Switches only forward (base-class defaults); the whole protocol runs in
+    :meth:`on_host_packet` + the per-step send enqueues."""
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        self.ring: Dict[int, _RingState] = {}
+
+    def setup_job(self, app: int, job, parts: List[int]) -> None:
+        sim = self.sim
+        from .simulator import contribution
+        rs = _RingState(parts, job.data_bytes, sim.cfg.payload_bytes)
+        rs.chunk_vals = [
+            [contribution(app, c, parts[r]) for c in range(rs.p)]
+            for r in range(rs.p)
+        ]
+        rs.recv_count = [dict() for _ in range(rs.p)]
+        rs.done_steps = [0] * rs.p
+        self.ring[app] = rs
+        for h in parts:
+            self._enqueue_send(app, h, step=0)
+
+    def next_host_packet(self, host: int) -> Optional[Packet]:
+        return None  # ring sends are queue-driven, not cursor-driven
+
+    def on_host_packet(self, host: int, pkt: Packet) -> bool:
+        if pkt.kind != PacketKind.RING:
+            return False
+        self._receive(host, pkt)
+        return True
+
+    # ---- protocol ----------------------------------------------------------
+    def _enqueue_send(self, app: int, host: int, step: int) -> None:
+        sim = self.sim
+        rs = self.ring[app]
+        r = rs.rank[host]
+        if step > rs.steps - 1:
+            return
+        c = (r - step) % rs.p
+        dest = rs.order[(r + 1) % rs.p]
+        val = rs.chunk_vals[r][c]
+        cfg = sim.cfg
+        remaining = rs.chunk_bytes
+        for i in range(rs.pkts_per_chunk):
+            take = min(cfg.payload_bytes, remaining)
+            remaining -= take
+            pkt = Packet(kind=PacketKind.RING, dest=dest, id=app,
+                         value=val if i == rs.pkts_per_chunk - 1 else 0,
+                         size_bytes=take + cfg.header_bytes, src=host,
+                         chunk=c, step=step)
+            sim.hostproto.hosts[host].queue.append(pkt)
+        sim.hostproto.schedule_pump(host, sim.now)
+
+    def _receive(self, host: int, pkt: Packet) -> None:
+        app = pkt.id
+        rs = self.ring[app]
+        r = rs.rank[host]
+        counts = rs.recv_count[r]
+        got = counts.get(pkt.step, 0) + 1
+        counts[pkt.step] = got
+        if pkt.value:
+            if pkt.step < rs.p - 1:
+                rs.chunk_vals[r][pkt.chunk] += pkt.value  # reduce-scatter phase
+            else:
+                rs.chunk_vals[r][pkt.chunk] = pkt.value   # all-gather phase
+        if got < rs.pkts_per_chunk:
+            return
+        counts.pop(pkt.step, None)
+        rs.done_steps[r] += 1
+        if pkt.step + 1 <= rs.steps - 1:
+            self._enqueue_send(app, host, pkt.step + 1)
+        # steps can *complete* out of order when paths differ; the host is
+        # finished only once every step's chunk has fully arrived.
+        if rs.done_steps[r] == rs.steps:
+            self._finish_host(app, host)
+
+    def _finish_host(self, app: int, host: int) -> None:
+        sim = self.sim
+        rs = self.ring[app]
+        r = rs.rank[host]
+        ok = all(rs.chunk_vals[r][c] == sim.expected_total(app, c)
+                 for c in range(rs.p))
+        if not ok:
+            sim.mismatches += 1
+        flags = sim.have[(app, host)]
+        newly = 0
+        for b in range(sim.blocks[app]):
+            if not flags[b]:
+                flags[b] = 1
+                newly += 1
+        sim.app_remaining[app] -= newly
+        sim.completed_blocks += newly
+        if sim.app_remaining[app] == 0:
+            sim.app_done_ns[app] = sim.now

@@ -1,15 +1,15 @@
-"""Packet-level discrete-event simulator for in-network allreduce (§5.2).
+"""Packet-level discrete-event simulator facade for in-network allreduce (§5.2).
 
-Implements the three algorithm families the paper evaluates:
+The simulator is layered (see ``ARCHITECTURE.md``); this module only wires
+the layers together and exposes the stable public API:
 
-* ``Algo.CANARY``       — dynamic trees, timeout aggregation, collisions +
-                          tree restoration, leader host, loss recovery (§3).
-* ``Algo.STATIC_TREE``  — N statically-configured reduction trees
-                          (N=1 ~ SHARP/SwitchML/ATP; N=4 ~ PANAMA).
-* ``Algo.RING``         — bandwidth-optimal host-based ring allreduce.
-
-plus a background random-uniform congestion workload (§5.2) and the §5.2.5
-sender-noise model.
+* :mod:`~.engine`    — event heap, clock, dispatch.
+* :mod:`~.topology`  — link fabric + routing (``fat_tree``/``three_tier``/...).
+* :mod:`~.switch`    — switch dataplane + the algorithm-strategy registry
+                       (``CANARY``, ``STATIC_TREE``; ``RING`` registers from
+                       :mod:`~.hostproto`).
+* :mod:`~.hostproto` — host send pump, leader role, loss recovery.
+* :mod:`~.workloads` — background congestion + sender-noise models.
 
 Every packet carries an exact integer payload; at the end of a run the
 simulator asserts that every participant received the true sum for every
@@ -19,79 +19,24 @@ end-to-end correctness proof of the protocol implementation.
 """
 from __future__ import annotations
 
-import heapq
 import random
-from collections import deque
-from typing import Deque, Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from .network import FatTree
-from .types import (Algo, AllreduceJob, Descriptor, Packet, PacketKind,
-                    SimConfig, SimResult, GEN_BITS, id_app, id_block, id_gen,
-                    make_id)
-
-# Event kinds (heap entries are (time, seq, kind, a, b, c) tuples).
-EV_ARRIVE_SWITCH = 0  # a=global switch idx, b=in port, c=packet
-EV_ARRIVE_HOST = 1    # a=host, c=packet
-EV_TIMER = 2          # a=switch, b=timer_seq, c=packet id
-EV_PUMP = 3           # a=host
-EV_RETX = 4           # a=host, c=(app, block, gen)
-EV_FAIL_SWITCH = 5    # a=switch
-EV_LEADER_DONE = 6    # a=leader host, c=(app, block, total)
+from . import network as _network  # noqa: F401  (registers "fat_tree")
+from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
+                     EV_LEADER_DONE, EV_PUMP, EV_RETX, EV_TIMER, EventLoop)
+from .hostproto import HostProtocol
+from .switch import SwitchLayer, make_strategy
+from .topology import make_topology
+from .types import Algo, AllreduceJob, Packet, SimConfig, SimResult
+from .workloads import CongestionWorkload
 
 _CONTRIB_MULT = 1000003
-_MAX_GEN = (1 << GEN_BITS) - 1
 
 
 def contribution(app: int, block: int, host: int) -> int:
     """Deterministic integer contribution of ``host`` to ``(app, block)``."""
     return (host + 1) * _CONTRIB_MULT + 31 * block + 7919 * app
-
-
-class _HostState:
-    __slots__ = ("queue", "pending", "pump_scheduled", "noise_peer",
-                 "noise_remaining", "noise_msg_idx", "send_cursor")
-
-    def __init__(self) -> None:
-        self.queue: Deque[Packet] = deque()
-        self.pending: Optional[Packet] = None
-        self.pump_scheduled = False
-        self.noise_peer = -1
-        self.noise_remaining = 0
-        self.noise_msg_idx = 0
-        # lazy cursor over this host's allreduce contributions: [app, next_block]
-        self.send_cursor: List[List[int]] = []
-
-
-class _LeaderState:
-    __slots__ = ("value", "counter", "gen", "restorations", "done",
-                 "last_fail_ns", "pending_done")
-
-    def __init__(self) -> None:
-        self.value = 0
-        self.counter = 0
-        self.gen = 0
-        self.restorations: List[Tuple[int, int]] = []
-        self.done = False
-        self.pending_done = False
-        self.last_fail_ns = -1e18
-
-
-class _RingState:
-    """Per-app ring-allreduce bookkeeping."""
-
-    __slots__ = ("order", "rank", "p", "chunk_vals", "recv_count", "steps",
-                 "pkts_per_chunk", "chunk_bytes", "done_steps")
-
-    def __init__(self, order: List[int], data_bytes: int, payload: int) -> None:
-        self.order = order
-        self.rank = {h: r for r, h in enumerate(order)}
-        self.p = len(order)
-        self.chunk_bytes = max(1, -(-data_bytes // self.p))
-        self.pkts_per_chunk = max(1, -(-self.chunk_bytes // payload))
-        self.steps = 2 * self.p - 2
-        self.chunk_vals: List[List[int]] = []
-        self.recv_count: List[Dict[int, int]] = []
-        self.done_steps: List[int] = []
 
 
 class Simulator:
@@ -103,34 +48,20 @@ class Simulator:
         cfg.validate()
         self.cfg = cfg
         self.jobs = {j.app: j for j in jobs}
-        self.algo = Algo(algo)
+        try:
+            self.algo = Algo(algo)
+        except ValueError:
+            self.algo = str(algo)  # strategy registered under a custom key
         self.n_trees = n_trees
-        self.net = FatTree(cfg)
+        self.net = make_topology(cfg)
         self.rng = random.Random(cfg.seed)
-        self.noise_hosts = list(noise_hosts or [])
-        self._noise_set = set(self.noise_hosts)
+        self.engine = EventLoop()
 
-        self.heap: List[Tuple[float, int, int, int, int, object]] = []
-        self._seq = 0
-        self.now = 0.0
-        self.events = 0
-
-        # hosts
-        self.hosts = [_HostState() for _ in range(cfg.num_hosts)]
-        self.host_gen: Dict[Tuple[int, int, int], int] = {}  # (host, app, block)
-
-        # switches
-        S = cfg.num_switches
-        self.tables: List[Dict[int, Descriptor]] = [dict() for _ in range(S)]
-        self.slots: List[Dict[int, int]] = [dict() for _ in range(S)]
-        self.failed = [False] * S
-        self.desc_high = [0] * S
-        self._timer_seq = 0
-
-        # leaders
-        self.leader_state: Dict[Tuple[int, int], _LeaderState] = {}
-        self.completed_total: Dict[Tuple[int, int], int] = {}
-        self.fallback_blocks: Set[Tuple[int, int]] = set()
+        # layers (construction order matters: strategies touch hostproto)
+        self.switch = SwitchLayer(self, self.net.num_switches)
+        self.hostproto = HostProtocol(self, cfg.num_hosts)
+        self.workload = CongestionWorkload(self, noise_hosts)
+        self.strategy = make_strategy(self.algo, self)
 
         # completion tracking
         self.have: Dict[Tuple[int, int], bytearray] = {}
@@ -138,7 +69,7 @@ class Simulator:
         self.app_done_ns: Dict[int, float] = {}
         self.mismatches = 0
 
-        # counters
+        # counters (mutated by the layers)
         self.stragglers = 0
         self.collisions = 0
         self.restorations = 0
@@ -151,11 +82,7 @@ class Simulator:
         self.blocks: Dict[int, int] = {}
         self.leaders: Dict[int, List[int]] = {}
         self.partset: Dict[int, Set[int]] = {}
-        self.static_roots: Dict[int, List[int]] = {}
-        self.leaf_expected: Dict[Tuple[int, int], int] = {}
-        self.root_expected: Dict[int, int] = {}
         self.contrib_sum_base: Dict[int, Tuple[int, int]] = {}
-        self.ring: Dict[int, _RingState] = {}
         self._setup_jobs()
 
     # ------------------------------------------------------------------ setup
@@ -189,45 +116,13 @@ class Simulator:
                 self.app_done_ns[app] = 0.0
                 self.completed_blocks += B
                 continue
-            if self.algo == Algo.STATIC_TREE:
-                roots = [self.rng.randrange(self.net.S) for _ in range(self.n_trees)]
-                self.static_roots[app] = roots
-                active_leaves = {self.net.leaf_of(h) for h in parts}
-                self.root_expected[app] = len(active_leaves)
-                for leaf in active_leaves:
-                    cnt = sum(1 for h in parts if self.net.leaf_of(h) == leaf)
-                    self.leaf_expected[(app, leaf)] = cnt
-            if self.algo == Algo.RING:
-                rs = _RingState(parts, job.data_bytes, cfg.payload_bytes)
-                rs.chunk_vals = [
-                    [contribution(app, c, parts[r]) for c in range(rs.p)]
-                    for r in range(rs.p)
-                ]
-                rs.recv_count = [dict() for _ in range(rs.p)]
-                rs.done_steps = [0] * rs.p
-                self.ring[app] = rs
-                for h in parts:
-                    self._ring_enqueue_send(app, h, step=0)
-            else:
-                for h in parts:
-                    self.hosts[h].send_cursor.append([app, 0])
-                    self._schedule_pump(h, 0.0)
-        for h in self.noise_hosts:
-            self._schedule_pump(h, 0.0)
+            self.strategy.setup_job(app, job, parts)
+        self.workload.start()
         if cfg.switch_fail_ns is not None and cfg.failed_switch is not None:
-            self._push(cfg.switch_fail_ns, EV_FAIL_SWITCH, cfg.failed_switch, 0, None)
+            self.engine.push(cfg.switch_fail_ns, EV_FAIL_SWITCH,
+                             cfg.failed_switch, 0, None)
 
-    # ------------------------------------------------------------------ utils
-    def _push(self, t: float, kind: int, a: int, b: int, c: object) -> None:
-        self._seq += 1
-        heapq.heappush(self.heap, (t, self._seq, kind, a, b, c))
-
-    def _schedule_pump(self, host: int, t: float) -> None:
-        hs = self.hosts[host]
-        if not hs.pump_scheduled:
-            hs.pump_scheduled = True
-            self._push(t, EV_PUMP, host, 0, None)
-
+    # ------------------------------------------------------------- protocol
     def expected_total(self, app: int, block: int) -> int:
         c = self.jobs[app].collective
         if c == "barrier":
@@ -253,636 +148,70 @@ class Simulator:
             return contribution(app, block, root) if host == root else 0
         return contribution(app, block, host)
 
-    @staticmethod
-    def _hash64(pid: int) -> int:
-        # Fibonacci hashing; use the HIGH bits — block ids have zero low bits
-        # (generation field), and power-of-two tables would otherwise see only
-        # a tiny fraction of their slots.
-        return ((pid * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> 24
+    # ----------------------------------------------- hooks used by the layers
+    @property
+    def now(self) -> float:
+        return self.engine.now
 
-    def _slot_of(self, pid: int) -> int:
-        cfg = self.cfg
-        if cfg.partition_table and len(self.jobs) > 1:
-            apps = len(self.jobs)
-            region = max(1, cfg.table_size // apps)
-            return (id_app(pid) % apps) * region + self._hash64(pid) % region
-        return self._hash64(pid) % cfg.table_size
+    @property
+    def events(self) -> int:
+        return self.engine.events
 
-    # --------------------------------------------------------------- transmit
-    def _maybe_drop(self) -> bool:
+    @property
+    def tables(self):
+        """Per-switch descriptor tables (compat accessor; state lives in the
+        switch layer)."""
+        return self.switch.tables
+
+    def maybe_drop(self) -> bool:
         return self.cfg.drop_prob > 0.0 and self.rng.random() < self.cfg.drop_prob
 
-    def _send_from_host(self, host: int, pkt: Packet) -> float:
-        link = self.net.host_up[host]
-        arrival = link.transmit(self.now, pkt.size_bytes)
-        if self._maybe_drop():
-            self.dropped += 1
-        else:
-            leaf = self.net.leaf_of(host)
-            self._push(arrival, EV_ARRIVE_SWITCH, leaf,
-                       self.net.leaf_port_of_host(host), pkt)
-        return link.busy_until
+    def arrive_switch(self, t: float, sw: int, port: int, pkt: Packet) -> None:
+        self.engine.push(t, EV_ARRIVE_SWITCH, sw, port, pkt)
 
-    def _send_leaf_up(self, leaf: int, spine: int, pkt: Packet) -> None:
-        link = self.net.leaf_up[leaf][spine]
-        arrival = link.transmit(self.now, pkt.size_bytes)
-        if self._maybe_drop():
-            self.dropped += 1
-            return
-        self._push(arrival, EV_ARRIVE_SWITCH, self.net.L + spine,
-                   self.net.spine_port_of_leaf(leaf), pkt)
+    def arrive_host(self, t: float, host: int, pkt: Packet) -> None:
+        self.engine.push(t, EV_ARRIVE_HOST, host, 0, pkt)
 
-    def _send_spine_down(self, spine: int, leaf: int, pkt: Packet) -> None:
-        link = self.net.leaf_down[leaf][spine]
-        arrival = link.transmit(self.now, pkt.size_bytes)
-        if self._maybe_drop():
-            self.dropped += 1
-            return
-        self._push(arrival, EV_ARRIVE_SWITCH, leaf,
-                   self.net.leaf_port_of_spine(spine), pkt)
-
-    def _send_leaf_to_host(self, host: int, pkt: Packet) -> None:
-        link = self.net.host_down[host]
-        arrival = link.transmit(self.now, pkt.size_bytes)
-        if self._maybe_drop():
-            self.dropped += 1
-            return
-        self._push(arrival, EV_ARRIVE_HOST, host, 0, pkt)
-
-    def _forward_toward_host(self, sw: int, pkt: Packet) -> None:
-        net = self.net
-        if net.is_leaf(sw):
-            if net.leaf_of(pkt.dest) == sw:
-                self._send_leaf_to_host(pkt.dest, pkt)
-            else:
-                # Default up-port: hash of (destination, block id). Same-block
-                # partials share the hash and so converge on one spine
-                # (maximizing aggregation); different blocks spread across
-                # spines ("each block in a different root", §3.1.3); and a
-                # retransmitted generation gets a *different* id and hence a
-                # different default path, which is how §3.3 routes around a
-                # failed switch. Background noise hashes on destination only.
-                kind = pkt.kind
-                dleaf = net.leaf_of(pkt.dest)
-                if kind == PacketKind.NOISE:
-                    fh = hash(pkt.dest)
-                elif kind == PacketKind.RING:
-                    fh = hash((pkt.dest, pkt.step))
-                else:
-                    fh = hash((pkt.dest, pkt.id))
-                # background congestion traffic rides its own policy (§2.1)
-                policy = str(self.cfg.noise_lb) if kind == PacketKind.NOISE \
-                    else None
-                if self.cfg.flowlet_lb and kind in (PacketKind.NOISE,
-                                                    PacketKind.RING):
-                    # point-to-point traffic moves at flowlet granularity [37]
-                    fkey = (int(kind), pkt.src, pkt.dest,
-                            pkt.chunk if kind == PacketKind.NOISE else pkt.step)
-                    spine = net.pick_spine_flowlet(sw, self.now, fh, fkey,
-                                                   self.rng, dest_leaf=dleaf,
-                                                   policy=policy)
-                else:
-                    spine = net.pick_spine(sw, self.now, fh, self.rng,
-                                           dest_leaf=dleaf)
-                self._send_leaf_up(sw, spine, pkt)
-        else:
-            self._send_spine_down(net.spine_index(sw), net.leaf_of(pkt.dest), pkt)
-
-    def _forward_toward_switch(self, sw: int, pkt: Packet) -> None:
-        net = self.net
-        target = pkt.dest_switch
-        if net.is_leaf(sw):
-            if net.is_leaf(target):
-                fh = hash(target)
-                spine = net.pick_spine(sw, self.now, fh, self.rng,
-                                       dest_leaf=target)
-                self._send_leaf_up(sw, spine, pkt)
-            else:
-                self._send_leaf_up(sw, net.spine_index(target), pkt)
-        else:
-            if net.is_leaf(target):
-                self._send_spine_down(net.spine_index(sw), target, pkt)
-            else:
-                # spine -> spine requires bouncing off any leaf; route via leaf 0
-                self._send_spine_down(net.spine_index(sw), 0, pkt)
-
-    def _out_port_send(self, sw: int, port: int, pkt: Packet) -> None:
-        net = self.net
-        if net.is_leaf(sw):
-            if port < net.H:
-                self._send_leaf_to_host(sw * net.H + port, pkt)
-            else:
-                self._send_leaf_up(sw, port - net.H, pkt)
-        else:
-            self._send_spine_down(net.spine_index(sw), port, pkt)
-
-    # ------------------------------------------------------------ host pump
-    def _next_host_packet(self, host: int) -> Optional[Packet]:
-        hs = self.hosts[host]
-        if hs.queue:
-            return hs.queue.popleft()
-        cfg = self.cfg
-        canary = self.algo == Algo.CANARY
-        for cur in hs.send_cursor:
-            app, nxt = cur
-            B = self.blocks[app]
-            if canary:
-                while nxt < B and self.leader_of(app, nxt) == host:
-                    nxt += 1  # the leader keeps its contribution local (§3.1.4)
-            if nxt < B:
-                cur[1] = nxt + 1
-                pid = make_id(app, nxt, 0)
-                size = cfg.header_bytes + 8 \
-                    if self.jobs[app].collective == "barrier" else cfg.mtu_bytes
-                pkt = Packet(kind=PacketKind.REDUCE, dest=self.leader_of(app, nxt),
-                             id=pid, counter=1, hosts=len(self.leaders[app]),
-                             value=self.contribution_of(app, nxt, host),
-                             size_bytes=size, src=host)
-                if canary:
-                    # loss detection is part of the Canary protocol (§3.3);
-                    # static-tree systems restart from scratch instead.
-                    self._push(self.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                               (app, nxt, 0))
-                return pkt
-            cur[1] = nxt
-        if host in self._noise_set:
-            if hs.noise_remaining <= 0:
-                # random-uniform pattern *among the congestion hosts* (§5.2):
-                # the background jobs and the allreduce job are distinct
-                # applications, so noise flows target noise hosts; they share
-                # the fabric (leaf/spine links) with the allreduce, not the
-                # participants' NICs.
-                peer = self.noise_hosts[self.rng.randrange(len(self.noise_hosts))]
-                while peer == host:
-                    peer = self.noise_hosts[self.rng.randrange(len(self.noise_hosts))]
-                hs.noise_peer = peer
-                hs.noise_remaining = cfg.noise_msg_bytes
-                hs.noise_msg_idx += 1
-            take = min(cfg.payload_bytes, hs.noise_remaining)
-            hs.noise_remaining -= take
-            return Packet(kind=PacketKind.NOISE, dest=hs.noise_peer, id=0,
-                          size_bytes=take + cfg.header_bytes, src=host,
-                          chunk=hs.noise_msg_idx)
-        return None
-
-    def _pump(self, host: int) -> None:
-        hs = self.hosts[host]
-        if self._all_done():
-            return
-        cfg = self.cfg
-        pkt = hs.pending
-        hs.pending = None
-        if pkt is None:
-            pkt = self._next_host_packet(host)
-            if pkt is None:
-                return
-            # §5.2.5 sender-side OS noise: delay this send with probability p.
-            if cfg.noise_prob > 0.0 and self.rng.random() < cfg.noise_prob:
-                hs.pending = pkt
-                hs.pump_scheduled = True
-                self._push(self.now + cfg.noise_delay_ns, EV_PUMP, host, 0, None)
-                return
-        nic_free = self._send_from_host(host, pkt)
-        hs.pump_scheduled = True
-        self._push(nic_free, EV_PUMP, host, 0, None)
-
-    # ------------------------------------------------------ canary data plane
-    def _canary_reduce_at_switch(self, sw: int, in_port: int, pkt: Packet) -> None:
-        cfg = self.cfg
-        pid = pkt.id
-        table = self.tables[sw]
-        desc = table.get(pid)
-        if desc is not None:
-            desc.children.add(in_port)
-            desc.last_ns = self.now
-            if desc.sent:
-                # straggler (§3.1.1): forward immediately, keep child recorded
-                self.stragglers += 1
-                self._forward_toward_host(sw, pkt)
-            else:
-                desc.value += pkt.value
-                desc.counter += pkt.counter
-                if desc.counter >= desc.hosts - 1:
-                    self._fire_descriptor(sw, desc)  # all data received (§3.1.4)
-            return
-        slot = self._slot_of(pid)
-        occupant = self.slots[sw].get(slot)
-        if occupant is not None:
-            odesc = table.get(occupant)
-            if odesc is None:
-                self.slots[sw].pop(slot, None)
-                occupant = None
-            elif self.now - odesc.last_ns > cfg.gc_ns:
-                # stale soft state (abandoned generation): garbage collect
-                self._dealloc(sw, odesc)
-                occupant = None
-        if occupant is not None:
-            # collision (§3.2.1): stamp and bypass straight to the leader
-            self.collisions += 1
-            pkt.switch_addr = sw
-            pkt.port_stamp = in_port
-            pkt.bypass = True
-            self._forward_toward_host(sw, pkt)
-            return
-        desc = Descriptor(id=pid, slot=slot, value=pkt.value, counter=pkt.counter,
-                          hosts=pkt.hosts, children={in_port}, alloc_ns=self.now,
-                          last_ns=self.now)
-        table[pid] = desc
-        self.slots[sw][slot] = pid
-        if len(table) > self.desc_high[sw]:
-            self.desc_high[sw] = len(table)
-        if desc.counter >= desc.hosts - 1:
-            self._fire_descriptor(sw, desc)
-            return
-        self._timer_seq += 1
-        desc.timer_seq = self._timer_seq
-        self._push(self.now + cfg.timeout_ns, EV_TIMER, sw, self._timer_seq, pid)
-
-    def _fire_descriptor(self, sw: int, desc: Descriptor) -> None:
-        """Timeout (or early completion): forward the partial aggregate (§3.1.1)."""
-        desc.sent = True
-        leader = self.leader_of(id_app(desc.id), id_block(desc.id))
-        out = Packet(kind=PacketKind.REDUCE, dest=leader, id=desc.id,
-                     counter=desc.counter, hosts=desc.hosts, value=desc.value,
-                     size_bytes=self.cfg.mtu_bytes)
-        self._forward_toward_host(sw, out)
-
-    def _dealloc(self, sw: int, desc: Descriptor) -> None:
-        self.tables[sw].pop(desc.id, None)
-        if self.slots[sw].get(desc.slot) == desc.id:
-            self.slots[sw].pop(desc.slot, None)
-
-    def _canary_bcast_at_switch(self, sw: int, pkt: Packet) -> None:
-        desc = self.tables[sw].get(pkt.id)
-        if desc is None:
-            # collision happened here during reduce: drop; the leader's
-            # restoration packet re-attaches this subtree (§3.2.1)
-            return
-        for port in desc.children:
-            self._out_port_send(sw, port, pkt)
-        self._dealloc(sw, desc)
-
-    def _restore_at(self, sw: int, pkt: Packet) -> None:
-        """Tree restoration (§3.2.1): forward data out the stamped ports."""
-        bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id, value=pkt.value,
-                    multicast=True, size_bytes=self.cfg.mtu_bytes)
-        for port in pkt.restore_ports:
-            self._out_port_send(sw, port, bc)
-
-    # ------------------------------------------------------ static-tree plane
-    def _static_reduce_at_switch(self, sw: int, in_port: int, pkt: Packet) -> None:
-        app = id_app(pkt.id)
-        block = id_block(pkt.id)
-        root = self.static_roots[app][block % self.n_trees]
-        table = self.tables[sw]
-        desc = table.get(pkt.id)
-        if desc is None:
-            if self.net.is_leaf(sw):
-                expected = self.leaf_expected[(app, sw)]
-            else:
-                expected = self.root_expected[app]
-            desc = Descriptor(id=pkt.id, slot=-1, hosts=pkt.hosts,
-                              expected=expected, alloc_ns=self.now,
-                              last_ns=self.now)
-            table[pkt.id] = desc
-            if len(table) > self.desc_high[sw]:
-                self.desc_high[sw] = len(table)
-        desc.children.add(in_port)
-        desc.value += pkt.value
-        desc.counter += pkt.counter
-        desc.last_ns = self.now
-        if len(desc.children) < desc.expected:
-            return
-        if self.net.is_leaf(sw):
-            out = Packet(kind=PacketKind.REDUCE, dest=-1, id=pkt.id,
-                         counter=desc.counter, hosts=pkt.hosts, value=desc.value,
-                         size_bytes=self.cfg.mtu_bytes)
-            self._send_leaf_up(sw, root, out)
-            desc.sent = True
-        else:
-            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id,
-                        value=desc.value, multicast=True,
-                        size_bytes=self.cfg.mtu_bytes)
-            for port in desc.children:
-                self._out_port_send(sw, port, bc)
-            table.pop(pkt.id, None)
-
-    def _static_bcast_at_switch(self, sw: int, pkt: Packet) -> None:
-        desc = self.tables[sw].get(pkt.id)
-        if desc is None:
-            return
-        for port in desc.children:
-            if self.net.is_leaf(sw) and port >= self.net.H:
-                continue  # never broadcast back up the tree
-            self._out_port_send(sw, port, pkt)
-        self.tables[sw].pop(pkt.id, None)
-
-    # ---------------------------------------------------------- switch arrival
-    def _arrive_switch(self, sw: int, in_port: int, pkt: Packet) -> None:
-        if self.failed[sw]:
-            self.dropped += 1
-            return
-        kind = pkt.kind
-        if kind in (PacketKind.NOISE, PacketKind.RING, PacketKind.RETX_REQ,
-                    PacketKind.FAIL, PacketKind.UNICAST_DATA):
-            self._forward_toward_host(sw, pkt)
-            return
-        if kind == PacketKind.RESTORE:
-            if pkt.dest_switch == sw:
-                self._restore_at(sw, pkt)
-            else:
-                self._forward_toward_switch(sw, pkt)
-            return
-        if self.algo == Algo.CANARY:
-            if kind == PacketKind.REDUCE:
-                if pkt.bypass:
-                    self._forward_toward_host(sw, pkt)
-                else:
-                    self._canary_reduce_at_switch(sw, in_port, pkt)
-            elif kind == PacketKind.BCAST:
-                self._canary_bcast_at_switch(sw, pkt)
-        else:  # STATIC_TREE
-            if kind == PacketKind.REDUCE:
-                self._static_reduce_at_switch(sw, in_port, pkt)
-            elif kind == PacketKind.BCAST:
-                self._static_bcast_at_switch(sw, pkt)
-
-    # ------------------------------------------------------------ host arrival
-    def _complete_at_host(self, host: int, app: int, block: int, value: int) -> None:
-        flags = self.have.get((app, host))
-        if flags is None or flags[block]:
-            return
-        flags[block] = 1
-        if value != self.expected_total(app, block):
-            self.mismatches += 1
-        self.app_remaining[app] -= 1
-        self.completed_blocks += 1
-        if self.app_remaining[app] == 0:
-            self.app_done_ns[app] = self.now
-
-    def _leader_block_done(self, host: int, app: int, block: int, total: int) -> None:
-        key = (app, block)
-        st = self.leader_state.get(key)
-        if st is None or st.done:
-            return
-        st.done = True
-        self.completed_total[key] = total
-        self._complete_at_host(host, app, block, total)
-        if self.jobs[app].collective == "reduce":
-            return  # §6: a reduce skips the broadcast phase entirely
-        pid = make_id(app, block, st.gen)
-        cfg = self.cfg
-        if key in self.fallback_blocks:
-            # host-based fallback (§3.3): no descriptors exist — unicast result
-            for h in self.leaders[app]:
-                if h == host:
-                    continue
-                up = Packet(kind=PacketKind.UNICAST_DATA, dest=h, id=pid,
-                            value=total, size_bytes=cfg.mtu_bytes, src=host)
-                self.hosts[host].queue.append(up)
-        else:
-            # broadcast down the recorded tree (§3.1.2)
-            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pid, value=total,
-                        multicast=True, size_bytes=cfg.mtu_bytes)
-            self.hosts[host].queue.append(bc)
-            # tree restoration for collided subtrees (§3.2.1)
-            by_switch: Dict[int, List[int]] = {}
-            for sw_addr, port in st.restorations:
-                by_switch.setdefault(sw_addr, []).append(port)
-            for sw_addr, ports in by_switch.items():
-                self.restorations += 1
-                rp = Packet(kind=PacketKind.RESTORE, dest=-1, id=pid, value=total,
-                            dest_switch=sw_addr, restore_ports=tuple(set(ports)),
-                            size_bytes=cfg.mtu_bytes)
-                self.hosts[host].queue.append(rp)
-        self._schedule_pump(host, self.now)
-
-    def _arrive_host(self, host: int, pkt: Packet) -> None:
-        kind = pkt.kind
-        cfg = self.cfg
-        if kind == PacketKind.NOISE:
-            return
-        if kind == PacketKind.RING:
-            self._ring_receive(host, pkt)
-            return
-        app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
-        if kind == PacketKind.REDUCE:
-            if self.leader_of(app, block) != host:
-                return
-            key = (app, block)
-            st = self.leader_state.setdefault(key, _LeaderState())
-            if st.done or st.pending_done or gen != st.gen:
-                return  # stale generation or already reduced
-            st.value += pkt.value
-            st.counter += pkt.counter
-            if pkt.switch_addr >= 0:
-                st.restorations.append((pkt.switch_addr, pkt.port_stamp))
-            if st.counter >= len(self.leaders[app]) - 1:
-                total = st.value + self.contribution_of(app, block, host)
-                st.pending_done = True
-                # leader-side aggregation cost r (§3.2.2)
-                self._push(self.now + cfg.leader_aggregate_ns, EV_LEADER_DONE,
-                           host, 0, (app, block, total))
-            return
-        if kind in (PacketKind.BCAST, PacketKind.UNICAST_DATA):
-            self._complete_at_host(host, app, block, pkt.value)
-            return
-        if kind == PacketKind.RETX_REQ:
-            self._leader_handle_retx(host, app, block, pkt.src)
-            return
-        if kind == PacketKind.FAIL:
-            self._host_handle_fail(host, pkt)
-            return
-
-    # ----------------------------------------------------------- reliability
-    def _leader_handle_retx(self, leader: int, app: int, block: int,
-                            requester: int) -> None:
-        cfg = self.cfg
-        key = (app, block)
-        total = self.completed_total.get(key)
-        if total is not None:
-            # loss was in the broadcast phase: retransmit reduced data (§3.3)
-            up = Packet(kind=PacketKind.UNICAST_DATA, dest=requester,
-                        id=make_id(app, block, 0), value=total,
-                        size_bytes=cfg.mtu_bytes, src=leader)
-            self.hosts[leader].queue.append(up)
-            self._schedule_pump(leader, self.now)
-            return
-        st = self.leader_state.setdefault(key, _LeaderState())
-        if st.pending_done:
-            return  # completion already in flight
-        if self.now - st.last_fail_ns < cfg.retx_timeout_ns / 2:
-            return  # debounce: a failure round is already in flight
-        st.last_fail_ns = self.now
-        newgen = min(st.gen + 1, _MAX_GEN)
-        fallback = newgen >= cfg.max_generations
-        if fallback and key not in self.fallback_blocks:
-            self.fallbacks += 1
-            self.fallback_blocks.add(key)
-        st.gen = newgen
-        st.value = 0
-        st.counter = 0
-        st.restorations = []
-        # "the leader broadcasts a failure message" (§3.3) — delivered unicast
-        for h in self.leaders[app]:
-            if h == leader:
-                continue
-            fl = Packet(kind=PacketKind.FAIL, dest=h,
-                        id=make_id(app, block, newgen),
-                        counter=1 if fallback else 0,
-                        size_bytes=cfg.header_bytes + 16, src=leader)
-            self.hosts[leader].queue.append(fl)
-        self._schedule_pump(leader, self.now)
-
-    def _host_handle_fail(self, host: int, pkt: Packet) -> None:
-        cfg = self.cfg
-        app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
-        hkey = (host, app, block)
-        if self.host_gen.get(hkey, 0) >= gen:
-            return
-        flags = self.have.get((app, host))
-        if flags is not None and flags[block]:
-            return
-        self.host_gen[hkey] = gen
-        self.retransmissions += 1
-        fallback = pkt.counter == 1
-        rp = Packet(kind=PacketKind.REDUCE, dest=self.leader_of(app, block),
-                    id=make_id(app, block, gen), counter=1,
-                    hosts=len(self.leaders[app]),
-                    value=self.contribution_of(app, block, host),
-                    bypass=fallback, size_bytes=cfg.mtu_bytes, src=host)
-        self.hosts[host].queue.append(rp)
-        self._push(self.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                   (app, block, gen))
-        self._schedule_pump(host, self.now)
-
-    def _host_retx_check(self, host: int, app: int, block: int, gen: int) -> None:
-        cfg = self.cfg
-        if self._all_done():
-            return
-        flags = self.have.get((app, host))
-        if flags is None or flags[block]:
-            return
-        if self.host_gen.get((host, app, block), 0) > gen:
-            return  # a newer generation is already in flight
-        self.retransmissions += 1
-        req = Packet(kind=PacketKind.RETX_REQ, dest=self.leader_of(app, block),
-                     id=make_id(app, block, gen),
-                     size_bytes=cfg.header_bytes + 16, src=host)
-        self.hosts[host].queue.append(req)
-        self._push(self.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                   (app, block, gen))
-        self._schedule_pump(host, self.now)
-
-    # ------------------------------------------------------------------- ring
-    def _ring_enqueue_send(self, app: int, host: int, step: int) -> None:
-        rs = self.ring[app]
-        r = rs.rank[host]
-        if step > rs.steps - 1:
-            return
-        c = (r - step) % rs.p
-        dest = rs.order[(r + 1) % rs.p]
-        val = rs.chunk_vals[r][c]
-        cfg = self.cfg
-        remaining = rs.chunk_bytes
-        for i in range(rs.pkts_per_chunk):
-            take = min(cfg.payload_bytes, remaining)
-            remaining -= take
-            pkt = Packet(kind=PacketKind.RING, dest=dest, id=app,
-                         value=val if i == rs.pkts_per_chunk - 1 else 0,
-                         size_bytes=take + cfg.header_bytes, src=host,
-                         chunk=c, step=step)
-            self.hosts[host].queue.append(pkt)
-        self._schedule_pump(host, self.now)
-
-    def _ring_receive(self, host: int, pkt: Packet) -> None:
-        app = pkt.id
-        rs = self.ring[app]
-        r = rs.rank[host]
-        counts = rs.recv_count[r]
-        got = counts.get(pkt.step, 0) + 1
-        counts[pkt.step] = got
-        if pkt.value:
-            if pkt.step < rs.p - 1:
-                rs.chunk_vals[r][pkt.chunk] += pkt.value  # reduce-scatter phase
-            else:
-                rs.chunk_vals[r][pkt.chunk] = pkt.value   # all-gather phase
-        if got < rs.pkts_per_chunk:
-            return
-        counts.pop(pkt.step, None)
-        rs.done_steps[r] += 1
-        if pkt.step + 1 <= rs.steps - 1:
-            self._ring_enqueue_send(app, host, pkt.step + 1)
-        # steps can *complete* out of order when paths differ; the host is
-        # finished only once every step's chunk has fully arrived.
-        if rs.done_steps[r] == rs.steps:
-            self._ring_finish_host(app, host)
-
-    def _ring_finish_host(self, app: int, host: int) -> None:
-        rs = self.ring[app]
-        r = rs.rank[host]
-        ok = all(rs.chunk_vals[r][c] == self.expected_total(app, c)
-                 for c in range(rs.p))
-        if not ok:
-            self.mismatches += 1
-        flags = self.have[(app, host)]
-        newly = 0
-        for b in range(self.blocks[app]):
-            if not flags[b]:
-                flags[b] = 1
-                newly += 1
-        self.app_remaining[app] -= newly
-        self.completed_blocks += newly
-        if self.app_remaining[app] == 0:
-            self.app_done_ns[app] = self.now
+    def all_done(self) -> bool:
+        return all(v == 0 for v in self.app_remaining.values())
 
     # -------------------------------------------------------------------- run
-    def _all_done(self) -> bool:
-        return all(v == 0 for v in self.app_remaining.values())
+    def _handle_pump(self, a: int, b: int, c: object) -> None:
+        self.hostproto.hosts[a].pump_scheduled = False
+        self.hostproto.pump(a)
+
+    def _handle_retx(self, a: int, b: int, c: object) -> None:
+        app, block, gen = c
+        self.hostproto.host_retx_check(a, app, block, gen)
+
+    def _handle_leader_done(self, a: int, b: int, c: object) -> None:
+        app, block, total = c
+        self.hostproto.leader_block_done(a, app, block, total)
 
     def run(self) -> SimResult:
         cfg = self.cfg
-        heap = self.heap
-        while heap:
-            if self._all_done():
-                break
-            t, _, kind, a, b, c = heapq.heappop(heap)
-            self.now = t
-            self.events += 1
-            if self.events > cfg.max_events:
-                raise RuntimeError("event budget exceeded — livelock?")
-            if kind == EV_ARRIVE_SWITCH:
-                self._arrive_switch(a, b, c)           # type: ignore[arg-type]
-            elif kind == EV_ARRIVE_HOST:
-                self._arrive_host(a, c)                # type: ignore[arg-type]
-            elif kind == EV_PUMP:
-                self.hosts[a].pump_scheduled = False
-                self._pump(a)
-            elif kind == EV_TIMER:
-                desc = self.tables[a].get(c)           # type: ignore[arg-type]
-                if desc is not None and desc.timer_seq == b and \
-                        not desc.sent and not self.failed[a]:
-                    self._fire_descriptor(a, desc)
-            elif kind == EV_RETX:
-                app, block, gen = c                    # type: ignore[misc]
-                self._host_retx_check(a, app, block, gen)
-            elif kind == EV_FAIL_SWITCH:
-                self.failed[a] = True
-            elif kind == EV_LEADER_DONE:
-                app, block, total = c                  # type: ignore[misc]
-                self._leader_block_done(a, app, block, total)
+        handlers = {
+            EV_ARRIVE_SWITCH: self.switch.arrive,
+            EV_ARRIVE_HOST: lambda a, b, c: self.hostproto.arrive(a, c),
+            EV_PUMP: self._handle_pump,
+            EV_TIMER: self.switch.on_timer,
+            EV_RETX: self._handle_retx,
+            EV_FAIL_SWITCH: lambda a, b, c: self.switch.fail_switch(a),
+            EV_LEADER_DONE: self._handle_leader_done,
+        }
+        self.engine.run(handlers, self.all_done, cfg.max_events)
         end = max(self.app_done_ns.values()) if self.app_done_ns else self.now
         utils = self.net.utilizations(end if end > 0 else 1.0)
         goodput = {}
         for app, job in self.jobs.items():
             dur = self.app_done_ns.get(app, self.now)
             goodput[app] = (job.data_bytes * 8.0) / dur if dur > 0 else 0.0
-        maxdesc = max(self.desc_high) if self.desc_high else 0
+        maxdesc = max(self.switch.desc_high) if self.switch.desc_high else 0
         return SimResult(
             duration_ns=end,
             start_ns=0.0,
             goodput_gbps=goodput,
-            correct=(self.mismatches == 0 and self._all_done()),
+            correct=(self.mismatches == 0 and self.all_done()),
             link_utilization=utils,
             avg_utilization=sum(utils) / len(utils) if utils else 0.0,
             stragglers=self.stragglers,

@@ -1,0 +1,376 @@
+"""Switch dataplane layer: per-switch soft state + aggregation strategies.
+
+Two pieces live here (see ``ARCHITECTURE.md``):
+
+* :class:`SwitchLayer` — the algorithm-independent dataplane every switch
+  runs: failure state, descriptor tables, arrival dispatch (pass-through
+  kinds, RESTORE routing, timer guards), and the tree-restoration fan-out.
+* The **algorithm-strategy registry**: :class:`AggregationStrategy`
+  subclasses implement how REDUCE/BCAST packets are processed in-network and
+  how hosts generate their sends. ``CANARY`` and ``STATIC_TREE`` live here;
+  host-based algorithms (``RING``, in ``hostproto.py``) register in the same
+  registry and simply leave the switch hooks at their pass-through defaults.
+
+Registering a new collective::
+
+    @register_algorithm(Algo.MY_ALGO)
+    class MyStrategy(AggregationStrategy):
+        ...
+
+No engine, topology or facade changes are needed — the facade looks the
+algorithm up by ``Algo`` value at construction time.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Type
+
+from .engine import EV_RETX, EV_TIMER
+from .types import (Algo, Descriptor, Packet, PacketKind, id_app, id_block,
+                    make_id)
+
+# kinds the switch dataplane never inspects — pure forwarding
+_PASSTHROUGH = (PacketKind.NOISE, PacketKind.RING, PacketKind.RETX_REQ,
+                PacketKind.FAIL, PacketKind.UNICAST_DATA)
+
+
+class SwitchLayer:
+    """Algorithm-independent per-switch state + arrival dispatch."""
+
+    def __init__(self, sim, num_switches: int):
+        self.sim = sim
+        self.tables: List[Dict[int, Descriptor]] = [dict() for _ in
+                                                    range(num_switches)]
+        self.slots: List[Dict[int, int]] = [dict() for _ in range(num_switches)]
+        self.failed = [False] * num_switches
+        self.desc_high = [0] * num_switches
+        self.timer_seq = 0
+
+    # ------------------------------------------------------------- dispatch
+    def arrive(self, sw: int, in_port: int, pkt: Packet) -> None:
+        sim = self.sim
+        if self.failed[sw]:
+            sim.dropped += 1
+            return
+        kind = pkt.kind
+        if kind in _PASSTHROUGH:
+            sim.net.forward_toward_host(sim, sw, pkt)
+            return
+        if kind == PacketKind.RESTORE:
+            if pkt.dest_switch == sw:
+                self.restore_at(sw, pkt)
+            else:
+                sim.net.forward_toward_switch(sim, sw, pkt)
+            return
+        if kind == PacketKind.REDUCE:
+            sim.strategy.on_switch_reduce(sw, in_port, pkt)
+        elif kind == PacketKind.BCAST:
+            sim.strategy.on_switch_bcast(sw, pkt)
+
+    def on_timer(self, sw: int, timer_seq: int, pid: int) -> None:
+        desc = self.tables[sw].get(pid)
+        if desc is not None and desc.timer_seq == timer_seq and \
+                not desc.sent and not self.failed[sw]:
+            self.sim.strategy.on_descriptor_timeout(sw, desc)
+
+    def fail_switch(self, sw: int) -> None:
+        self.failed[sw] = True
+
+    # ------------------------------------------------------------- helpers
+    def note_high_water(self, sw: int) -> None:
+        if len(self.tables[sw]) > self.desc_high[sw]:
+            self.desc_high[sw] = len(self.tables[sw])
+
+    def dealloc(self, sw: int, desc: Descriptor) -> None:
+        self.tables[sw].pop(desc.id, None)
+        if self.slots[sw].get(desc.slot) == desc.id:
+            self.slots[sw].pop(desc.slot, None)
+
+    def restore_at(self, sw: int, pkt: Packet) -> None:
+        """Tree restoration (§3.2.1): forward data out the stamped ports."""
+        sim = self.sim
+        bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id, value=pkt.value,
+                    multicast=True, size_bytes=sim.cfg.mtu_bytes)
+        for port in pkt.restore_ports:
+            sim.net.out_port_send(sim, sw, port, bc)
+
+
+# --------------------------------------------------------------------------
+# Algorithm-strategy registry
+# --------------------------------------------------------------------------
+# Keyed by *string* value (Algo is a str-enum, so built-ins use their enum
+# value) — new collectives register under any fresh key without having to
+# extend the Algo enum first.
+ALGORITHMS: Dict[str, Type["AggregationStrategy"]] = {}
+
+
+def register_algorithm(algo):
+    """Class decorator: bind a strategy to an :class:`Algo` value or any
+    string key a new collective wants to go by."""
+
+    def deco(cls: Type["AggregationStrategy"]) -> Type["AggregationStrategy"]:
+        cls.algo = algo
+        ALGORITHMS[str(algo)] = cls
+        return cls
+
+    return deco
+
+
+def make_strategy(algo, sim) -> "AggregationStrategy":
+    try:
+        cls = ALGORITHMS[str(algo)]
+    except KeyError:
+        raise ValueError(f"no strategy registered for algorithm {algo!r}; "
+                         f"registered: {sorted(ALGORITHMS)}") from None
+    return cls(sim)
+
+
+class AggregationStrategy:
+    """How one collective algorithm uses the fabric.
+
+    The defaults implement a *host-based* algorithm riding a cursor-less
+    send queue: switches forward everything, hosts drive the protocol via
+    :meth:`on_host_packet`. In-network algorithms override the switch hooks.
+    """
+
+    algo: Algo
+    leader_skips_self = False  # CANARY: the leader keeps its contribution local
+    uses_retx_timers = False   # CANARY: host-side loss detection (§3.3)
+
+    def __init__(self, sim):
+        self.sim = sim
+
+    # ---- job setup ---------------------------------------------------------
+    def setup_job(self, app: int, job, parts: List[int]) -> None:
+        """Default: every participant streams its blocks via a lazy cursor."""
+        hp = self.sim.hostproto
+        for h in parts:
+            hp.hosts[h].send_cursor.append([app, 0])
+            hp.schedule_pump(h, 0.0)
+
+    # ---- host send generation ---------------------------------------------
+    def next_host_packet(self, host: int) -> Optional[Packet]:
+        """Produce this host's next allreduce send (monolith cursor walk)."""
+        sim = self.sim
+        hs = sim.hostproto.hosts[host]
+        cfg = sim.cfg
+        for cur in hs.send_cursor:
+            app, nxt = cur
+            B = sim.blocks[app]
+            if self.leader_skips_self:
+                while nxt < B and sim.leader_of(app, nxt) == host:
+                    nxt += 1  # the leader keeps its contribution local (§3.1.4)
+            if nxt < B:
+                cur[1] = nxt + 1
+                pid = make_id(app, nxt, 0)
+                size = cfg.header_bytes + 8 \
+                    if sim.jobs[app].collective == "barrier" else cfg.mtu_bytes
+                pkt = Packet(kind=PacketKind.REDUCE,
+                             dest=sim.leader_of(app, nxt), id=pid, counter=1,
+                             hosts=len(sim.leaders[app]),
+                             value=sim.contribution_of(app, nxt, host),
+                             size_bytes=size, src=host)
+                if self.uses_retx_timers:
+                    # loss detection is part of the Canary protocol (§3.3);
+                    # static-tree systems restart from scratch instead.
+                    sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX,
+                                    host, 0, (app, nxt, 0))
+                return pkt
+            cur[1] = nxt
+        return None
+
+    # ---- switch dataplane hooks --------------------------------------------
+    def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
+        self.sim.net.forward_toward_host(self.sim, sw, pkt)
+
+    def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
+        self.sim.net.forward_toward_host(self.sim, sw, pkt)
+
+    def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
+        pass
+
+    # ---- host arrival hook --------------------------------------------------
+    def on_host_packet(self, host: int, pkt: Packet) -> bool:
+        """Return True when the strategy consumed the packet."""
+        return False
+
+
+@register_algorithm(Algo.CANARY)
+class CanaryStrategy(AggregationStrategy):
+    """Dynamic trees: timeout aggregation, collisions + restoration (§3)."""
+
+    leader_skips_self = True
+    uses_retx_timers = True
+
+    # ---- descriptor slot hashing -------------------------------------------
+    @staticmethod
+    def _hash64(pid: int) -> int:
+        # Fibonacci hashing; use the HIGH bits — block ids have zero low bits
+        # (generation field), and power-of-two tables would otherwise see only
+        # a tiny fraction of their slots.
+        return ((pid * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> 24
+
+    def slot_of(self, pid: int) -> int:
+        sim = self.sim
+        cfg = sim.cfg
+        if cfg.partition_table and len(sim.jobs) > 1:
+            apps = len(sim.jobs)
+            region = max(1, cfg.table_size // apps)
+            return (id_app(pid) % apps) * region + self._hash64(pid) % region
+        return self._hash64(pid) % cfg.table_size
+
+    # ---- dataplane ----------------------------------------------------------
+    def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
+        sim = self.sim
+        if pkt.bypass:
+            sim.net.forward_toward_host(sim, sw, pkt)
+            return
+        sl = sim.switch
+        cfg = sim.cfg
+        pid = pkt.id
+        table = sl.tables[sw]
+        desc = table.get(pid)
+        if desc is not None:
+            desc.children.add(in_port)
+            desc.last_ns = sim.now
+            if desc.sent:
+                # straggler (§3.1.1): forward immediately, keep child recorded
+                sim.stragglers += 1
+                sim.net.forward_toward_host(sim, sw, pkt)
+            else:
+                desc.value += pkt.value
+                desc.counter += pkt.counter
+                if desc.counter >= desc.hosts - 1:
+                    self._fire_descriptor(sw, desc)  # all data received (§3.1.4)
+            return
+        slot = self.slot_of(pid)
+        occupant = sl.slots[sw].get(slot)
+        if occupant is not None:
+            odesc = table.get(occupant)
+            if odesc is None:
+                sl.slots[sw].pop(slot, None)
+                occupant = None
+            elif sim.now - odesc.last_ns > cfg.gc_ns:
+                # stale soft state (abandoned generation): garbage collect
+                sl.dealloc(sw, odesc)
+                occupant = None
+        if occupant is not None:
+            # collision (§3.2.1): stamp and bypass straight to the leader
+            sim.collisions += 1
+            pkt.switch_addr = sw
+            pkt.port_stamp = in_port
+            pkt.bypass = True
+            sim.net.forward_toward_host(sim, sw, pkt)
+            return
+        desc = Descriptor(id=pid, slot=slot, value=pkt.value,
+                          counter=pkt.counter, hosts=pkt.hosts,
+                          children={in_port}, alloc_ns=sim.now,
+                          last_ns=sim.now)
+        table[pid] = desc
+        sl.slots[sw][slot] = pid
+        sl.note_high_water(sw)
+        if desc.counter >= desc.hosts - 1:
+            self._fire_descriptor(sw, desc)
+            return
+        sl.timer_seq += 1
+        desc.timer_seq = sl.timer_seq
+        sim.engine.push(sim.now + cfg.timeout_ns, EV_TIMER, sw, sl.timer_seq,
+                        pid)
+
+    def _fire_descriptor(self, sw: int, desc: Descriptor) -> None:
+        """Timeout (or early completion): forward the partial aggregate (§3.1.1)."""
+        sim = self.sim
+        desc.sent = True
+        leader = sim.leader_of(id_app(desc.id), id_block(desc.id))
+        out = Packet(kind=PacketKind.REDUCE, dest=leader, id=desc.id,
+                     counter=desc.counter, hosts=desc.hosts, value=desc.value,
+                     size_bytes=sim.cfg.mtu_bytes)
+        sim.net.forward_toward_host(sim, sw, out)
+
+    def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
+        self._fire_descriptor(sw, desc)
+
+    def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
+        sim = self.sim
+        desc = sim.switch.tables[sw].get(pkt.id)
+        if desc is None:
+            # collision happened here during reduce: drop; the leader's
+            # restoration packet re-attaches this subtree (§3.2.1)
+            return
+        for port in desc.children:
+            sim.net.out_port_send(sim, sw, port, pkt)
+        sim.switch.dealloc(sw, desc)
+
+
+@register_algorithm(Algo.STATIC_TREE)
+class StaticTreeStrategy(AggregationStrategy):
+    """N statically-configured reduction trees (N=1 ~ SHARP/SwitchML/ATP;
+    N=4 ~ PANAMA). Roots are drawn from the topology's root candidates; the
+    per-switch expected-children plan comes from
+    :meth:`~.topology.Topology.static_expected`, so the same strategy runs on
+    any registered topology."""
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        self.roots: Dict[int, List[int]] = {}          # app -> tree roots
+        self.plans: Dict[tuple, Dict[int, int]] = {}   # (app, root) -> plan
+
+    def setup_job(self, app: int, job, parts: List[int]) -> None:
+        sim = self.sim
+        cands = sim.net.root_candidates()
+        roots = [cands[sim.rng.randrange(len(cands))]
+                 for _ in range(sim.n_trees)]
+        self.roots[app] = roots
+        for root in roots:
+            if (app, root) not in self.plans:
+                self.plans[(app, root)] = sim.net.static_expected(parts, root)
+        super().setup_job(app, job, parts)
+
+    def root_of(self, app: int, block: int) -> int:
+        roots = self.roots[app]
+        return roots[block % len(roots)]
+
+    def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
+        sim = self.sim
+        sl = sim.switch
+        app = id_app(pkt.id)
+        root = self.root_of(app, id_block(pkt.id))
+        table = sl.tables[sw]
+        desc = table.get(pkt.id)
+        if desc is None:
+            expected = self.plans[(app, root)][sw]
+            desc = Descriptor(id=pkt.id, slot=-1, hosts=pkt.hosts,
+                              expected=expected, alloc_ns=sim.now,
+                              last_ns=sim.now)
+            table[pkt.id] = desc
+            sl.note_high_water(sw)
+        desc.children.add(in_port)
+        desc.value += pkt.value
+        desc.counter += pkt.counter
+        desc.last_ns = sim.now
+        if len(desc.children) < desc.expected:
+            return
+        if sw != root:
+            out = Packet(kind=PacketKind.REDUCE, dest=-1, id=pkt.id,
+                         counter=desc.counter, hosts=pkt.hosts,
+                         value=desc.value, size_bytes=sim.cfg.mtu_bytes)
+            sim.net.static_send_up(sim, sw, root, out)
+            desc.sent = True
+        else:
+            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id,
+                        value=desc.value, multicast=True,
+                        size_bytes=sim.cfg.mtu_bytes)
+            for port in desc.children:
+                sim.net.out_port_send(sim, sw, port, bc)
+            table.pop(pkt.id, None)
+
+    def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
+        sim = self.sim
+        table = sim.switch.tables[sw]
+        desc = table.get(pkt.id)
+        if desc is None:
+            return
+        for port in desc.children:
+            if sim.net.is_up_port(sw, port):
+                continue  # never broadcast back up the tree
+            sim.net.out_port_send(sim, sw, port, pkt)
+        table.pop(pkt.id, None)

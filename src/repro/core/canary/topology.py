@@ -1,0 +1,519 @@
+"""Topology layer: links, the :class:`Topology` protocol, and the registry.
+
+The simulator core is topology-agnostic. A concrete topology owns every
+:class:`Link` in the fabric and implements routing as "send this packet one
+step and schedule its arrival" operations against the simulator facade (which
+exposes ``now``, ``rng``, ``maybe_drop`` and the two arrival schedulers).
+
+Implementations:
+
+* ``fat_tree``   — the paper's two-level full-bisection leaf/spine fabric
+                   (:class:`repro.core.canary.network.FatTree`).
+* ``three_tier`` — a folded-Clos leaf/agg/core fabric
+                   (:class:`ThreeTierFatTree`, below) that exercises the
+                   load-balancing policies on 4-hop paths.
+
+Registering a new topology::
+
+    @register_topology("my_fabric")
+    class MyFabric(Topology):
+        ...
+
+and select it with ``SimConfig(topology="my_fabric")`` — no engine, switch or
+host-protocol changes needed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Type
+
+from .types import Packet, PacketKind, SimConfig
+
+
+class Link:
+    """A unidirectional link with serialization, propagation and a FIFO queue.
+
+    A link keeps ``busy_until`` — the time its output is committed through —
+    and the backlog at time ``t`` is ``(busy_until - t) * bytes_per_ns``. This
+    gives exact serialization + queueing delay for FIFO ports without per-byte
+    events, and is what the adaptive load-balancing policy (§5.2: "up port
+    with the smallest number of enqueued bytes") inspects.
+    """
+
+    __slots__ = ("busy_until", "bytes_sent", "bytes_per_ns", "latency_ns",
+                 "capacity")
+
+    def __init__(self, bytes_per_ns: float, latency_ns: float, capacity: int):
+        self.busy_until = 0.0
+        self.bytes_sent = 0
+        self.bytes_per_ns = bytes_per_ns
+        self.latency_ns = latency_ns
+        self.capacity = capacity
+
+    def backlog_bytes(self, now: float) -> float:
+        b = (self.busy_until - now) * self.bytes_per_ns
+        return b if b > 0.0 else 0.0
+
+    def occupancy(self, now: float) -> float:
+        return self.backlog_bytes(now) / self.capacity
+
+    def transmit(self, now: float, size_bytes: int) -> float:
+        """Enqueue ``size_bytes`` at ``now``; return arrival time at the far end."""
+        start = self.busy_until if self.busy_until > now else now
+        self.busy_until = start + size_bytes / self.bytes_per_ns
+        self.bytes_sent += size_bytes
+        return self.busy_until + self.latency_ns
+
+
+class Topology:
+    """Routing/fabric protocol the simulator layers program against.
+
+    ``sim`` in every signature is the :class:`~.simulator.Simulator` facade;
+    topologies use only its ``now``/``rng``/``cfg`` state, ``maybe_drop()``
+    and the ``arrive_switch``/``arrive_host`` event schedulers, plus its
+    ``dropped`` counter.
+    """
+
+    name: str = ""
+
+    # --- identity ----------------------------------------------------------
+    cfg: SimConfig
+    L: int                 # number of leaf (host-facing) switches
+    num_switches: int
+    num_hosts: int
+
+    @classmethod
+    def config_num_switches(cls, cfg: SimConfig) -> int:
+        """Switch count implied by ``cfg`` without building the fabric.
+        Override with a closed-form count; the default builds an instance
+        (correct for any topology, but allocates links)."""
+        return cls(cfg).num_switches
+
+    def leaf_of(self, host: int) -> int:
+        raise NotImplementedError
+
+    def is_leaf(self, sw: int) -> bool:
+        raise NotImplementedError
+
+    def is_up_port(self, sw: int, port: int) -> bool:
+        """True when ``port`` points away from the hosts (toward the core)."""
+        raise NotImplementedError
+
+    # --- flow identity (shared by all fabrics so they never diverge) -------
+    def flow_hash(self, pkt: Packet) -> int:
+        """Default up-path hash. Same-block partials share the hash and so
+        converge on one up-path (maximizing aggregation); different blocks
+        spread ("each block in a different root", §3.1.3); a retransmitted
+        generation gets a different id and hence a different default path
+        (§3.3). Background noise hashes on destination only."""
+        kind = pkt.kind
+        if kind == PacketKind.NOISE:
+            return hash(pkt.dest)
+        if kind == PacketKind.RING:
+            return hash((pkt.dest, pkt.step))
+        return hash((pkt.dest, pkt.id))
+
+    @staticmethod
+    def flowlet_key(pkt: Packet) -> tuple:
+        """Identity of a point-to-point flowlet [37] (NOISE/RING traffic)."""
+        return (int(pkt.kind), pkt.src, pkt.dest,
+                pkt.chunk if pkt.kind == PacketKind.NOISE else pkt.step)
+
+    # --- shared transmit + drop accounting ---------------------------------
+    # Every link send follows the same sequence: serialize on the link (bytes
+    # count even for packets dropped in flight), roll the iid drop, schedule
+    # the arrival. Topologies must route through these two helpers so drop
+    # semantics can never diverge between fabrics.
+    def tx_to_switch(self, sim, link: Link, pkt: Packet, sw: int,
+                     port: int) -> float:
+        arrival = link.transmit(sim.now, pkt.size_bytes)
+        if sim.maybe_drop():
+            sim.dropped += 1
+        else:
+            sim.arrive_switch(arrival, sw, port, pkt)
+        return link.busy_until
+
+    def tx_to_host(self, sim, link: Link, pkt: Packet, host: int) -> float:
+        arrival = link.transmit(sim.now, pkt.size_bytes)
+        if sim.maybe_drop():
+            sim.dropped += 1
+        else:
+            sim.arrive_host(arrival, host, pkt)
+        return link.busy_until
+
+    # --- data movement -----------------------------------------------------
+    def send_from_host(self, sim, host: int, pkt: Packet) -> float:
+        """Transmit on the host NIC; returns the time the NIC frees up."""
+        raise NotImplementedError
+
+    def forward_toward_host(self, sim, sw: int, pkt: Packet) -> None:
+        """One routing step of a host-destined packet (LB happens here)."""
+        raise NotImplementedError
+
+    def forward_toward_switch(self, sim, sw: int, pkt: Packet) -> None:
+        """One routing step of a switch-destined (RESTORE) packet."""
+        raise NotImplementedError
+
+    def out_port_send(self, sim, sw: int, port: int, pkt: Packet) -> None:
+        """Send out an explicit port — broadcast fan-out over recorded children."""
+        raise NotImplementedError
+
+    # --- static-tree support ------------------------------------------------
+    def root_candidates(self) -> List[int]:
+        """Global switch ids eligible as static-tree roots."""
+        raise NotImplementedError
+
+    def static_expected(self, parts: List[int], root: int) -> Dict[int, int]:
+        """Per-switch child count the static tree rooted at ``root`` waits for."""
+        raise NotImplementedError
+
+    def static_send_up(self, sim, sw: int, root: int, pkt: Packet) -> None:
+        """Forward a fully-aggregated partial one level toward ``root``."""
+        raise NotImplementedError
+
+    # --- accounting ---------------------------------------------------------
+    def all_links(self) -> List[Link]:
+        raise NotImplementedError
+
+    def utilizations(self, duration_ns: float) -> List[float]:
+        if duration_ns <= 0:
+            return [0.0 for _ in self.all_links()]
+        denom = duration_ns * self.cfg.bytes_per_ns
+        return [min(1.0, l.bytes_sent / denom) for l in self.all_links()]
+
+
+TOPOLOGIES: Dict[str, Type[Topology]] = {}
+
+
+def register_topology(name: str):
+    """Class decorator: make a :class:`Topology` selectable via ``SimConfig``."""
+
+    def deco(cls: Type[Topology]) -> Type[Topology]:
+        cls.name = name
+        TOPOLOGIES[name] = cls
+        return cls
+
+    return deco
+
+
+def make_topology(cfg: SimConfig) -> Topology:
+    try:
+        cls = TOPOLOGIES[cfg.topology]
+    except KeyError:
+        raise ValueError(f"unknown topology {cfg.topology!r}; "
+                         f"registered: {sorted(TOPOLOGIES)}") from None
+    return cls(cfg)
+
+
+def pick_min_backlog(links: List[Link], default: int, now: float,
+                     policy: str, threshold_bytes: float,
+                     remote: Optional[List[Link]] = None) -> int:
+    """Generic congestion-aware up-port choice over a candidate link list.
+
+    Mirrors the 2-level ``FatTree.pick_spine`` semantics: ``ecmp`` sticks to
+    the hash default; ``adaptive`` keeps the default until its backlog crosses
+    the threshold; otherwise (or ``per_packet``) take the least-backlogged
+    candidate, ties broken toward the default for determinism. When ``remote``
+    is given (one known downstream link per candidate), its backlog joins the
+    metric — the CONGA-style path-congestion measure (§2.1).
+    """
+
+    def metric(i: int) -> float:
+        b = links[i].backlog_bytes(now)
+        if remote is not None:
+            b += remote[i].backlog_bytes(now)
+        return b
+
+    if policy == "ecmp":
+        return default
+    if policy == "adaptive" and metric(default) <= threshold_bytes:
+        return default
+    best, best_b = default, metric(default)
+    for i in range(len(links)):
+        b = metric(i)
+        if b < best_b - 1e-9:
+            best, best_b = i, b
+    return best
+
+
+@register_topology("three_tier")
+class ThreeTierFatTree(Topology):
+    """Three-tier folded Clos: hosts — leaves — pod aggregation — core.
+
+    * ``cfg.num_pods`` pods, each with ``num_leaves / num_pods`` leaves and
+      ``cfg.aggs_per_pod`` aggregation switches (full bipartite inside the
+      pod); ``cfg.num_cores`` core switches, full bipartite to every
+      aggregation switch.
+    * Global switch ids: leaves ``[0, L)``, aggs ``[L, L+P*A)``, cores
+      ``[L+P*A, L+P*A+C)``.
+    * Port maps: leaf — ``[0, H)`` hosts then ``[H, H+A)`` pod aggs;
+      agg — ``[0, leaves_per_pod)`` pod leaves then cores; core — one port
+      per agg (``pod * A + agg_in_pod``).
+
+    Cross-pod paths are 4 switch hops (leaf→agg→core→agg→leaf), so the
+    congestion-aware policies make two up-port decisions per packet — this is
+    the topology the LB sensitivity sweeps use. Oversubscription falls out of
+    the counts (e.g. 8 leaves/pod vs 2 aggs/pod).
+    """
+
+    def __init__(self, cfg: SimConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.L = cfg.num_leaves
+        self.H = cfg.hosts_per_leaf
+        self.P = cfg.num_pods
+        if self.P <= 0 or self.L % self.P:
+            raise ValueError("three_tier needs num_pods > 0 dividing num_leaves")
+        self.A = cfg.aggs_per_pod
+        self.C = cfg.num_cores
+        if self.A <= 0 or self.C <= 0:
+            raise ValueError("three_tier needs aggs_per_pod and num_cores > 0")
+        self.leaves_per_pod = self.L // self.P
+        self.num_hosts = cfg.num_hosts
+        self.num_aggs = self.P * self.A
+        self.num_switches = self.L + self.num_aggs + self.C
+        bpn, lat, cap = cfg.bytes_per_ns, cfg.hop_latency_ns, cfg.buffer_bytes
+
+        def mk() -> Link:
+            return Link(bpn, lat, cap)
+
+        self.host_up = [mk() for _ in range(self.num_hosts)]
+        self.host_down = [mk() for _ in range(self.num_hosts)]
+        # leaf <-> agg, within the pod: indexed [leaf][agg_in_pod]
+        self.leaf_up = [[mk() for _ in range(self.A)] for _ in range(self.L)]
+        self.leaf_down = [[mk() for _ in range(self.A)] for _ in range(self.L)]
+        # agg <-> core, full bipartite: indexed [agg_global_local][core]
+        self.agg_up = [[mk() for _ in range(self.C)]
+                       for _ in range(self.num_aggs)]
+        self.agg_down = [[mk() for _ in range(self.C)]
+                         for _ in range(self.num_aggs)]
+        self.flowlets: dict = {}
+
+    # ---- identity ----------------------------------------------------------
+    @classmethod
+    def config_num_switches(cls, cfg: SimConfig) -> int:
+        return (cfg.num_leaves + cfg.num_pods * cfg.aggs_per_pod
+                + cfg.num_cores)
+
+    def leaf_of(self, host: int) -> int:
+        return host // self.H
+
+    def pod_of_leaf(self, leaf: int) -> int:
+        return leaf // self.leaves_per_pod
+
+    def is_leaf(self, sw: int) -> bool:
+        return sw < self.L
+
+    def is_agg(self, sw: int) -> bool:
+        return self.L <= sw < self.L + self.num_aggs
+
+    def agg_local(self, sw: int) -> int:
+        return sw - self.L
+
+    def core_local(self, sw: int) -> int:
+        return sw - self.L - self.num_aggs
+
+    def agg_gid(self, pod: int, a: int) -> int:
+        return self.L + pod * self.A + a
+
+    def core_gid(self, c: int) -> int:
+        return self.L + self.num_aggs + c
+
+    def is_up_port(self, sw: int, port: int) -> bool:
+        if self.is_leaf(sw):
+            return port >= self.H
+        if self.is_agg(sw):
+            return port >= self.leaves_per_pod
+        return False
+
+    # ---- low-level sends ---------------------------------------------------
+    def send_from_host(self, sim, host: int, pkt: Packet) -> float:
+        return self.tx_to_switch(sim, self.host_up[host], pkt,
+                                 self.leaf_of(host), host % self.H)
+
+    def _send_to_host(self, sim, host: int, pkt: Packet) -> None:
+        self.tx_to_host(sim, self.host_down[host], pkt, host)
+
+    def _send_leaf_to_agg(self, sim, leaf: int, a: int, pkt: Packet) -> None:
+        pod = self.pod_of_leaf(leaf)
+        self.tx_to_switch(sim, self.leaf_up[leaf][a], pkt,
+                          self.agg_gid(pod, a), leaf % self.leaves_per_pod)
+
+    def _send_agg_to_leaf(self, sim, agg_l: int, leaf: int, pkt: Packet) -> None:
+        self.tx_to_switch(sim, self.leaf_down[leaf][agg_l % self.A], pkt,
+                          leaf, self.H + agg_l % self.A)
+
+    def _send_agg_to_core(self, sim, agg_l: int, c: int, pkt: Packet) -> None:
+        self.tx_to_switch(sim, self.agg_up[agg_l][c], pkt, self.core_gid(c),
+                          agg_l)
+
+    def _send_core_to_agg(self, sim, c: int, agg_l: int, pkt: Packet) -> None:
+        self.tx_to_switch(sim, self.agg_down[agg_l][c], pkt, self.L + agg_l,
+                          self.leaves_per_pod + c)
+
+    # ---- LB decisions ------------------------------------------------------
+    def _policy_for(self, pkt: Packet) -> str:
+        cfg = self.cfg
+        return str(cfg.noise_lb) if pkt.kind == PacketKind.NOISE else str(cfg.lb)
+
+    def _pick(self, sim, sw: int, links: List[Link], default: int,
+              pkt: Packet, remote: Optional[List[Link]] = None) -> int:
+        """Choose an up-port index among ``links`` (flowlet-sticky for
+        point-to-point traffic when ``cfg.flowlet_lb``). ``remote`` carries
+        the known downstream leg per candidate for CONGA-style path metrics
+        (only passed when ``cfg.path_aware_lb``)."""
+        cfg = self.cfg
+        policy = self._policy_for(pkt)
+        thr = cfg.lb_threshold * cfg.buffer_bytes
+        if cfg.flowlet_lb and pkt.kind in (PacketKind.NOISE, PacketKind.RING):
+            fkey = (sw,) + self.flowlet_key(pkt)
+            cached = self.flowlets.get(fkey)
+            if cached is not None:
+                return cached
+            choice = pick_min_backlog(links, default, sim.now, policy, thr,
+                                      remote)
+            self.flowlets[fkey] = choice
+            return choice
+        return pick_min_backlog(links, default, sim.now, policy, thr, remote)
+
+    # ---- routing -----------------------------------------------------------
+    def forward_toward_host(self, sim, sw: int, pkt: Packet) -> None:
+        # flow_hash is computed lazily per branch: final-hop delivery (the
+        # most common case — every packet ends in one) never needs it
+        dleaf = self.leaf_of(pkt.dest)
+        if self.is_leaf(sw):
+            if dleaf == sw:
+                self._send_to_host(sim, pkt.dest, pkt)
+                return
+            fh = self.flow_hash(pkt)
+            # path-aware metric: when the destination leaf is in this pod
+            # the agg->dest-leaf down leg is known per candidate agg; for
+            # cross-pod traffic the remaining legs depend on later hops
+            remote = [self.leaf_down[dleaf][a] for a in range(self.A)] \
+                if self.cfg.path_aware_lb and \
+                self.pod_of_leaf(dleaf) == self.pod_of_leaf(sw) else None
+            a = self._pick(sim, sw, self.leaf_up[sw], fh % self.A, pkt,
+                           remote)
+            self._send_leaf_to_agg(sim, sw, a, pkt)
+        elif self.is_agg(sw):
+            agg_l = self.agg_local(sw)
+            pod = agg_l // self.A
+            if self.pod_of_leaf(dleaf) == pod:
+                self._send_agg_to_leaf(sim, agg_l, dleaf, pkt)
+            else:
+                fh = self.flow_hash(pkt)
+                # the down agg in the destination pod is a deterministic hash
+                # choice (see the core branch below), so the core->agg down
+                # leg per candidate core is known here: measure it (§2.1)
+                dagg = self.pod_of_leaf(dleaf) * self.A + fh % self.A
+                remote = [self.agg_down[dagg][c] for c in range(self.C)] \
+                    if self.cfg.path_aware_lb else None
+                c = self._pick(sim, sw, self.agg_up[agg_l], fh % self.C, pkt,
+                               remote)
+                self._send_agg_to_core(sim, agg_l, c, pkt)
+        else:
+            c = self.core_local(sw)
+            dpod = self.pod_of_leaf(dleaf)
+            # deterministic hash choice of the destination pod's agg: same
+            # block converges on one down-path, maximizing in-path aggregation
+            a = self.flow_hash(pkt) % self.A
+            self._send_core_to_agg(sim, c, dpod * self.A + a, pkt)
+
+    def forward_toward_switch(self, sim, sw: int, pkt: Packet) -> None:
+        target = pkt.dest_switch
+        fh = hash(target)
+        if self.is_leaf(sw):
+            pod = self.pod_of_leaf(sw)
+            if self.is_agg(target) and self.agg_local(target) // self.A == pod:
+                self._send_leaf_to_agg(sim, sw, self.agg_local(target) % self.A,
+                                       pkt)
+            else:
+                self._send_leaf_to_agg(sim, sw, fh % self.A, pkt)
+        elif self.is_agg(sw):
+            agg_l = self.agg_local(sw)
+            pod = agg_l // self.A
+            if self.is_leaf(target):
+                if self.pod_of_leaf(target) == pod:
+                    self._send_agg_to_leaf(sim, agg_l, target, pkt)
+                else:
+                    self._send_agg_to_core(sim, agg_l, fh % self.C, pkt)
+            elif self.is_agg(target):
+                if self.agg_local(target) // self.A == pod:
+                    # sibling agg: bounce via the pod's first leaf
+                    self._send_agg_to_leaf(sim, agg_l,
+                                           pod * self.leaves_per_pod, pkt)
+                else:
+                    self._send_agg_to_core(sim, agg_l, fh % self.C, pkt)
+            else:
+                self._send_agg_to_core(sim, agg_l, self.core_local(target), pkt)
+        else:
+            c = self.core_local(sw)
+            if self.is_agg(target):
+                self._send_core_to_agg(sim, c, self.agg_local(target), pkt)
+            else:
+                dpod = self.pod_of_leaf(target) if self.is_leaf(target) else 0
+                self._send_core_to_agg(sim, c, dpod * self.A + fh % self.A, pkt)
+
+    def out_port_send(self, sim, sw: int, port: int, pkt: Packet) -> None:
+        if self.is_leaf(sw):
+            if port < self.H:
+                self._send_to_host(sim, sw * self.H + port, pkt)
+            else:
+                self._send_leaf_to_agg(sim, sw, port - self.H, pkt)
+        elif self.is_agg(sw):
+            agg_l = self.agg_local(sw)
+            pod = agg_l // self.A
+            if port < self.leaves_per_pod:
+                self._send_agg_to_leaf(sim, agg_l,
+                                       pod * self.leaves_per_pod + port, pkt)
+            else:
+                self._send_agg_to_core(sim, agg_l, port - self.leaves_per_pod,
+                                       pkt)
+        else:
+            self._send_core_to_agg(sim, self.core_local(sw), port, pkt)
+
+    # ---- static-tree support ----------------------------------------------
+    def root_candidates(self) -> List[int]:
+        return [self.core_gid(c) for c in range(self.C)]
+
+    def _designated_agg(self, root: int, pod: int) -> int:
+        """The one agg a static tree uses in ``pod`` (deterministic per root,
+        spread across roots so multi-tree runs use disjoint up-paths)."""
+        return self.agg_gid(pod, (self.core_local(root) + pod) % self.A)
+
+    def static_expected(self, parts: List[int], root: int) -> Dict[int, int]:
+        plan: Dict[int, int] = {}
+        pods = set()
+        leaves_by_pod: Dict[int, set] = {}
+        for h in parts:
+            leaf = self.leaf_of(h)
+            plan[leaf] = plan.get(leaf, 0) + 1
+            pod = self.pod_of_leaf(leaf)
+            pods.add(pod)
+            leaves_by_pod.setdefault(pod, set()).add(leaf)
+        for pod, leaves in leaves_by_pod.items():
+            plan[self._designated_agg(root, pod)] = len(leaves)
+        plan[root] = len(pods)
+        return plan
+
+    def static_send_up(self, sim, sw: int, root: int, pkt: Packet) -> None:
+        if self.is_leaf(sw):
+            agg = self._designated_agg(root, self.pod_of_leaf(sw))
+            self._send_leaf_to_agg(sim, sw, self.agg_local(agg) % self.A, pkt)
+        else:
+            self._send_agg_to_core(sim, self.agg_local(sw),
+                                   self.core_local(root), pkt)
+
+    # ---- accounting --------------------------------------------------------
+    def all_links(self) -> List[Link]:
+        out: List[Link] = []
+        out.extend(self.host_up)
+        out.extend(self.host_down)
+        for row in self.leaf_up:
+            out.extend(row)
+        for row in self.leaf_down:
+            out.extend(row)
+        for row in self.agg_up:
+            out.extend(row)
+        for row in self.agg_down:
+            out.extend(row)
+        return out

@@ -37,7 +37,16 @@ class PacketKind(enum.IntEnum):
     RING = 7         # host-based ring allreduce traffic (baseline, §5.2)
 
 
-class Algo(enum.StrEnum):
+class _StrEnum(str, enum.Enum):
+    """``enum.StrEnum`` backport: members *are* their string values and
+    ``str()`` returns the bare value (``enum.StrEnum`` itself is 3.11+; the
+    supported floor is Python 3.10)."""
+
+    __str__ = str.__str__
+    __format__ = str.__format__
+
+
+class Algo(_StrEnum):
     """Allreduce algorithms implemented in the simulator (§5.2)."""
 
     CANARY = "canary"
@@ -45,7 +54,7 @@ class Algo(enum.StrEnum):
     RING = "ring"                 # bandwidth-optimal host-based ring
 
 
-class LoadBalancing(enum.StrEnum):
+class LoadBalancing(_StrEnum):
     """Up-port selection policies at the leaf switches."""
 
     ECMP = "ecmp"            # hash-based, congestion-oblivious
@@ -135,10 +144,19 @@ class Descriptor:
 class SimConfig:
     """World configuration. Defaults reproduce the paper's §5.2 setup."""
 
-    # -- topology: two-level fat tree ----------------------------------------
+    # -- topology --------------------------------------------------------------
+    # Which registered Topology implementation to build (see topology.py):
+    # "fat_tree" (the paper's 2-level leaf/spine) or "three_tier" (folded-Clos
+    # leaf/agg/core). New topologies register via @register_topology.
+    topology: str = "fat_tree"
     num_leaves: int = 32
     hosts_per_leaf: int = 32
-    num_spines: int = 32
+    num_spines: int = 32              # fat_tree only
+    # three_tier only: pods of (num_leaves/num_pods) leaves + aggs_per_pod
+    # aggregation switches, num_cores core switches (full bipartite agg<->core)
+    num_pods: int = 0
+    aggs_per_pod: int = 0
+    num_cores: int = 0
 
     # -- links ---------------------------------------------------------------
     link_gbps: float = 100.0          # hosts and switches: 100 Gb/s NICs/ports
@@ -200,7 +218,18 @@ class SimConfig:
 
     @property
     def num_switches(self) -> int:
-        return self.num_leaves + self.num_spines
+        """Total switch count of the selected topology (delegates to the
+        registered Topology class, so plug-in fabrics report correctly)."""
+        from .topology import TOPOLOGIES  # function-level: avoid import cycle
+        cls = TOPOLOGIES.get(self.topology)
+        if cls is not None:
+            return cls.config_num_switches(self)
+        if self.topology == "fat_tree":
+            # registry not populated yet (bare `types` import): the 2-level
+            # formula is correct for the default fabric only
+            return self.num_leaves + self.num_spines
+        raise ValueError(f"unknown topology {self.topology!r}; import the "
+                         "module that registers it before reading num_switches")
 
     @property
     def bytes_per_ns(self) -> float:
@@ -211,7 +240,7 @@ class SimConfig:
         return self.payload_bytes + self.header_bytes
 
     def validate(self) -> None:
-        if self.num_spines > self.hosts_per_leaf:
+        if self.topology == "fat_tree" and self.num_spines > self.hosts_per_leaf:
             # the paper's fat tree is full-bisection: 32 up + 32 down ports/leaf
             raise ValueError("leaf switches need hosts_per_leaf >= num_spines uplinks "
                              "only in oversubscribed setups; got more spines than uplinks")
@@ -223,6 +252,22 @@ def paper_config(**overrides) -> "SimConfig":
     """The paper's §5.2 network: 1024 hosts, 32 leaves x 64 ports, 32 spines."""
     base = dict(num_leaves=32, hosts_per_leaf=32, num_spines=32,
                 link_gbps=100.0, payload_bytes=1024, table_size=32768)
+    base.update(overrides)
+    return SimConfig(**base)
+
+
+def three_tier_config(num_pods: int = 4, leaves_per_pod: int = 2,
+                      hosts_per_leaf: int = 4, aggs_per_pod: int = 2,
+                      num_cores: int = 4, **overrides) -> "SimConfig":
+    """A 3-tier folded-Clos network (leaf/agg/core). Defaults give 32 hosts
+    with 2:1 leaf->agg oversubscription; cross-pod paths are 4 switch hops,
+    exercising the LB policies twice per packet."""
+    base = dict(topology="three_tier",
+                num_leaves=num_pods * leaves_per_pod,
+                hosts_per_leaf=hosts_per_leaf, num_pods=num_pods,
+                aggs_per_pod=aggs_per_pod, num_cores=num_cores,
+                table_size=max(4096, num_pods * leaves_per_pod
+                               * hosts_per_leaf * 64))
     base.update(overrides)
     return SimConfig(**base)
 

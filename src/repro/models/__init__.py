@@ -1,3 +1,7 @@
+from ..compat import patch_jax as _patch_jax
+
+_patch_jax()
+
 from .config import ModelConfig
 from .registry import get_config, list_archs
 from .transformer import (decode_step, forward, init_cache, init_params,

@@ -1,3 +1,7 @@
+from ..compat import patch_jax as _patch_jax
+
+_patch_jax()
+
 from .losses import cross_entropy
 from .train_step import (TrainConfig, init_train_state, make_loss_fn,
                          make_train_step)

@@ -1,0 +1,46 @@
+"""The parallel sweep runner must match its serial execution exactly and
+produce well-formed JSON (the bench-trajectory contract)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _run_sweep(tmp_path, procs: int, name: str) -> dict:
+    out = os.path.join(str(tmp_path), f"{name}.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["BENCH_FAST"] = "1"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep", "--suite", "lb",
+         "--reps", "2", "--procs", str(procs), "--out", out],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    with open(out) as fh:
+        return json.load(fh)
+
+
+def test_parallel_sweep_matches_serial(tmp_path):
+    serial = _run_sweep(tmp_path, procs=0, name="serial")
+    parallel = _run_sweep(tmp_path, procs=2, name="parallel")
+    assert serial["correct"] and parallel["correct"]
+    assert serial["aggregates"] == parallel["aggregates"]
+    # every cell identical (order-independent): the pool changes scheduling,
+    # never results
+    key = lambda c: (c["label"], c["rep"])  # noqa: E731
+    strip = lambda c: {k: v for k, v in c.items() if k != "wall_s"}  # noqa: E731
+    assert sorted(map(strip, serial["results"]), key=key) == \
+        sorted(map(strip, parallel["results"]), key=key)
+
+
+def test_sweep_document_shape(tmp_path):
+    doc = _run_sweep(tmp_path, procs=2, name="shape")
+    assert doc["suite"] == "lb" and doc["cells"] == 6
+    assert set(doc["aggregates"]) == {"canary/lb=ecmp", "canary/lb=adaptive",
+                                      "canary/lb=per_packet"}
+    for cell in doc["results"]:
+        assert cell["events"] > 0 and cell["goodput_gbps"] > 0
+    assert doc["wall_s"] > 0 and doc["cpu_s"] > 0

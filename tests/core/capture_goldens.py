@@ -1,0 +1,39 @@
+"""Regenerate the simulator golden-replay fixtures.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tests/core/capture_goldens.py
+
+Only do this when a behaviour change is *intentional*; the whole point of the
+goldens is to prove structural refactors leave behaviour bit-identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from golden_cases import CASES, GOLDEN_PATH, build_simulator, result_to_jsonable
+
+
+def main() -> None:
+    out = {}
+    for name in CASES:
+        sim = build_simulator(name)
+        result = sim.run()
+        if not result.correct:
+            raise SystemExit(f"case {name!r} produced an incorrect run; "
+                             "refusing to capture a broken golden")
+        out[name] = result_to_jsonable(result)
+        print(f"{name}: events={result.events} duration_ns={result.duration_ns}")
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as fh:
+        json.dump(out, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(out)} goldens -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

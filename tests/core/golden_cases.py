@@ -1,0 +1,126 @@
+"""Golden-replay scenarios for the simulator.
+
+Each case pins a full ``SimConfig`` + job set + algorithm. The goldens under
+``goldens/simulator_goldens.json`` were captured from the pre-refactor
+monolithic ``Simulator`` (PR 1); the layered engine must reproduce every
+``SimResult`` field **bit-identically** — same event count, same completion
+times, same counters — on every case. Any diff means the refactor changed
+behaviour, not just structure.
+
+Regenerate (only when a behaviour change is intentional and understood) with::
+
+    PYTHONPATH=src python tests/core/capture_goldens.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "simulator_goldens.json")
+
+
+def _cfg(**kw) -> SimConfig:
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4,
+                table_size=4096, seed=11, max_events=20_000_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _jobs(spec: List[dict]) -> List[AllreduceJob]:
+    return [AllreduceJob(**s) for s in spec]
+
+
+# name -> (cfg kwargs, job specs, algo, n_trees, noise hosts)
+CASES: Dict[str, tuple] = {
+    "canary_basic": (
+        dict(), [dict(app=0, participants=list(range(8)), data_bytes=32768)],
+        Algo.CANARY, 1, None),
+    "canary_spread_leaves": (
+        dict(seed=7), [dict(app=0, participants=[0, 4, 8, 12, 13, 15],
+                            data_bytes=65536)],
+        Algo.CANARY, 1, None),
+    "canary_collisions": (
+        dict(table_size=1),
+        [dict(app=0, participants=list(range(8)), data_bytes=16384)],
+        Algo.CANARY, 1, None),
+    "canary_drops": (
+        dict(drop_prob=0.01, retx_timeout_ns=5e4, seed=5),
+        [dict(app=0, participants=list(range(8)), data_bytes=16384)],
+        Algo.CANARY, 1, None),
+    "canary_switch_failure": (
+        dict(switch_fail_ns=2000.0, failed_switch=5, retx_timeout_ns=5e4,
+             seed=3),
+        [dict(app=0, participants=list(range(10)), data_bytes=32768)],
+        Algo.CANARY, 1, None),
+    "canary_congestion_noise": (
+        dict(noise_prob=0.05, noise_delay_ns=1000.0, seed=13),
+        [dict(app=0, participants=list(range(8)), data_bytes=32768)],
+        Algo.CANARY, 1, list(range(8, 16))),
+    "canary_multiapp_partitioned": (
+        dict(table_size=8192, partition_table=True),
+        [dict(app=0, participants=[0, 1, 2, 3], data_bytes=8192),
+         dict(app=1, participants=[4, 5, 6, 7], data_bytes=8192)],
+        Algo.CANARY, 1, None),
+    "canary_mixed_collectives": (
+        dict(table_size=8192, seed=2),
+        [dict(app=0, participants=[0, 1, 2, 3], data_bytes=16384),
+         dict(app=1, participants=[4, 5, 6, 7], data_bytes=16384,
+              collective="reduce", root=4),
+         dict(app=2, participants=[8, 9, 10, 11], data_bytes=16384,
+              collective="broadcast", root=8),
+         dict(app=3, participants=[12, 13, 14, 15], data_bytes=0,
+              collective="barrier")],
+        Algo.CANARY, 1, None),
+    "canary_tiny_timeout": (
+        dict(timeout_ns=50.0),
+        [dict(app=0, participants=list(range(12)), data_bytes=65536)],
+        Algo.CANARY, 1, None),
+    "static_single_tree": (
+        dict(), [dict(app=0, participants=list(range(16)), data_bytes=16384)],
+        Algo.STATIC_TREE, 1, None),
+    "static_four_trees_noise": (
+        dict(seed=17), [dict(app=0, participants=list(range(8)),
+                             data_bytes=32768)],
+        Algo.STATIC_TREE, 4, list(range(8, 16))),
+    "ring_basic": (
+        dict(), [dict(app=0, participants=[0, 1, 2, 5, 9, 10, 14],
+                      data_bytes=10000)],
+        Algo.RING, 1, None),
+    "ring_noise": (
+        dict(seed=23), [dict(app=0, participants=list(range(8)),
+                             data_bytes=32768)],
+        Algo.RING, 1, list(range(8, 16))),
+    "ecmp_lb": (
+        dict(seed=29, lb="ecmp"),
+        [dict(app=0, participants=list(range(8)), data_bytes=32768)],
+        Algo.CANARY, 1, list(range(8, 16))),
+    "per_packet_lb": (
+        dict(seed=31, lb="per_packet"),
+        [dict(app=0, participants=list(range(8)), data_bytes=32768)],
+        Algo.CANARY, 1, list(range(8, 16))),
+}
+
+
+def build_simulator(name: str) -> Simulator:
+    cfg_kw, jobs_spec, algo, n_trees, noise = CASES[name]
+    return Simulator(_cfg(**cfg_kw), _jobs(jobs_spec), algo=algo,
+                     n_trees=n_trees, noise_hosts=noise)
+
+
+def result_to_jsonable(result) -> dict:
+    """SimResult -> JSON-stable dict (int dict keys become strings)."""
+    d = dataclasses.asdict(result)
+    d["goodput_gbps"] = {str(k): v for k, v in d["goodput_gbps"].items()}
+    # round-trip through the JSON encoder so in-memory results compare equal
+    # to goldens loaded from disk (float repr round-trips exactly)
+    return json.loads(json.dumps(d))
+
+
+def load_goldens() -> dict:
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)

@@ -1,0 +1,34 @@
+"""Golden-replay regression: the layered engine must reproduce the seed
+(pre-refactor, monolithic) simulator bit-for-bit on pinned scenarios.
+
+The goldens were captured from the PR-1 monolith via
+``tests/core/capture_goldens.py``. Every ``SimResult`` field — completion
+times, event counts, per-link utilization, all protocol counters — must match
+exactly; the simulator is fully deterministic given ``SimConfig.seed``.
+"""
+import pytest
+
+from golden_cases import CASES, build_simulator, load_goldens, result_to_jsonable
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_replay_matches_golden(name, goldens):
+    assert name in goldens, f"golden for {name!r} missing — run capture_goldens"
+    got = result_to_jsonable(build_simulator(name).run())
+    want = goldens[name]
+    # compare field-by-field for readable failures before the full-dict check
+    for field in sorted(want):
+        assert got[field] == want[field], f"{name}: field {field!r} diverged"
+    assert got == want
+
+
+def test_replay_is_deterministic():
+    """Two fresh runs of the same case are identical (no hidden global state)."""
+    a = result_to_jsonable(build_simulator("canary_congestion_noise").run())
+    b = result_to_jsonable(build_simulator("canary_congestion_noise").run())
+    assert a == b

@@ -1,0 +1,166 @@
+"""Unit tests for the three up-port selection policies (§2.1, §5.2).
+
+A crafted hot-link scenario preloads backlog on the hash-default up-link and
+asserts each policy's defining behaviour: ECMP never moves (congestion
+oblivious), ADAPTIVE moves only past the occupancy threshold, PER_PACKET
+always takes the least-backlogged port.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.canary import (Algo, AllreduceJob, LoadBalancing, SimConfig,
+                               Simulator, make_topology)
+from repro.core.canary.topology import pick_min_backlog
+
+
+def _net(lb, **kw):
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4, lb=lb,
+                path_aware_lb=False)
+    base.update(kw)
+    return make_topology(SimConfig(**base))
+
+
+def _heat(net, leaf, spine, bytes_):
+    """Preload ``bytes_`` of backlog on one leaf->spine up-link at t=0."""
+    net.leaf_up[leaf][spine].transmit(0.0, bytes_)
+
+
+FLOW_HASH = 13  # default spine = 13 % 4 = 1
+
+
+def test_ecmp_is_congestion_oblivious():
+    net = _net(LoadBalancing.ECMP)
+    default = FLOW_HASH % 4
+    _heat(net, 0, default, 10 * net.cfg.buffer_bytes)  # saturate the default
+    # ECMP sticks to the hash default no matter the backlog
+    assert net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) == default
+
+
+def test_per_packet_picks_min_backlog_up_port():
+    net = _net(LoadBalancing.PER_PACKET)
+    default = FLOW_HASH % 4
+    # make every port hot except spine 2, which stays the coolest
+    for s, load in enumerate([3000, 5000, 100, 4000]):
+        _heat(net, 0, s, load)
+    assert net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) == 2
+    # tiny backlog on the default only: any loaded default loses to idle ports
+    net2 = _net(LoadBalancing.PER_PACKET)
+    _heat(net2, 0, default, 64)
+    assert net2.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) != default
+
+
+def test_per_packet_prefers_default_on_ties():
+    """Determinism: with all ports equal, the hash default wins."""
+    net = _net(LoadBalancing.PER_PACKET)
+    assert net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) == FLOW_HASH % 4
+
+
+def test_adaptive_moves_only_past_threshold():
+    net = _net(LoadBalancing.ADAPTIVE)
+    default = FLOW_HASH % 4
+    thr = net.cfg.lb_threshold * net.cfg.buffer_bytes
+    # just below threshold: stay on the default
+    _heat(net, 0, default, int(thr) - 1024)
+    assert net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) == default
+    # push past threshold: adapt to the min-backlog port
+    _heat(net, 0, default, 4096)
+    assert net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH) != default
+
+
+def test_adaptive_path_aware_sees_remote_hotspot():
+    """CONGA-style path metric: a hot spine->dest-leaf *down* link diverts
+    traffic even when the local up-link is idle."""
+    net = _net(LoadBalancing.ADAPTIVE, path_aware_lb=True)
+    default = FLOW_HASH % 4
+    dest_leaf = 2
+    net.leaf_down[dest_leaf][default].transmit(0.0, 10 * net.cfg.buffer_bytes)
+    got = net.pick_spine(0, now=0.0, flow_hash=FLOW_HASH, dest_leaf=dest_leaf)
+    assert got != default
+    # the same backlog is invisible to a purely local policy
+    net_local = _net(LoadBalancing.ADAPTIVE)
+    net_local.leaf_down[dest_leaf][default].transmit(
+        0.0, 10 * net_local.cfg.buffer_bytes)
+    got_local = net_local.pick_spine(0, now=0.0, flow_hash=FLOW_HASH,
+                                     dest_leaf=dest_leaf)
+    assert got_local == default
+
+
+def test_pick_min_backlog_generic_helper():
+    """The shared helper (3-tier topologies) mirrors pick_spine semantics."""
+    from repro.core.canary.topology import Link
+    links = [Link(12.5, 300.0, 131072) for _ in range(3)]
+    links[0].transmit(0.0, 9000)
+    links[1].transmit(0.0, 100)
+    assert pick_min_backlog(links, 0, 0.0, "ecmp", 4096) == 0
+    assert pick_min_backlog(links, 0, 0.0, "per_packet", 4096) == 2
+    assert pick_min_backlog(links, 0, 0.0, "adaptive", 65536) == 0  # below thr
+    assert pick_min_backlog(links, 0, 0.0, "adaptive", 4096) == 2   # above thr
+
+
+def test_noise_honors_noise_lb_without_flowlets():
+    """Background traffic rides cfg.noise_lb on every path — including the
+    per-packet (flowlet_lb=False) branch, where the seed monolith silently
+    used cfg.lb instead. Pinned here because no golden covers it."""
+    from repro.core.canary import Packet, PacketKind
+
+    class _StubSim:
+        now = 0.0
+        rng = None
+        dropped = 0
+        scheduled = []
+
+        def maybe_drop(self):
+            return False
+
+        def arrive_switch(self, t, sw, port, pkt):
+            self.scheduled.append((sw, port))
+
+        def arrive_host(self, t, host, pkt):
+            pass
+
+    net = _net(LoadBalancing.PER_PACKET, noise_lb=LoadBalancing.ECMP,
+               flowlet_lb=False)
+    pkt = Packet(kind=PacketKind.NOISE, dest=12, id=0, size_bytes=1024, src=0)
+    default = net.flow_hash(pkt) % net.S
+    _heat(net, 0, default, 10 * net.cfg.buffer_bytes)  # hot default up-link
+    before = net.leaf_up[0][default].bytes_sent
+    net.forward_toward_host(_StubSim(), 0, pkt)
+    # ECMP noise must stay on the (hot) hash default; per_packet would move
+    assert net.leaf_up[0][default].bytes_sent == before + pkt.size_bytes
+
+
+def test_custom_topology_num_switches_from_config():
+    """SimConfig.num_switches delegates to the registered topology class."""
+    from repro.core.canary import TOPOLOGIES, register_topology
+    from repro.core.canary.network import FatTree
+
+    name = "test_counted_fabric"
+
+    @register_topology(name)
+    class Counted(FatTree):
+        @classmethod
+        def config_num_switches(cls, cfg):
+            return 123
+
+    try:
+        assert SimConfig(topology=name).num_switches == 123
+        assert SimConfig().num_switches == 64           # fat_tree default
+        cfg3 = SimConfig(topology="three_tier", num_leaves=8, num_pods=4,
+                         aggs_per_pod=2, num_cores=4)
+        assert cfg3.num_switches == 8 + 8 + 4
+    finally:
+        TOPOLOGIES.pop(name, None)
+
+
+@pytest.mark.parametrize("lb", [LoadBalancing.ECMP, LoadBalancing.ADAPTIVE,
+                                LoadBalancing.PER_PACKET])
+def test_all_policies_end_to_end_correct(lb):
+    """Every policy yields exact allreduce results under congestion."""
+    cfg = SimConfig(num_leaves=4, hosts_per_leaf=4, num_spines=4, lb=lb,
+                    table_size=4096, seed=19, max_events=20_000_000)
+    noise = list(range(8, 16))
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 32768)],
+                    algo=Algo.CANARY, noise_hosts=noise)
+    r = sim.run()
+    assert r.correct

@@ -1,0 +1,111 @@
+"""End-to-end coverage of the pluggable topology layer.
+
+The 2-level fat tree is pinned by the golden-replay suite; these tests cover
+the 3-tier folded Clos (``three_tier``) and the topology registry itself.
+"""
+import pytest
+
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               TOPOLOGIES, compare_algorithms, make_topology,
+                               three_tier_config)
+
+
+def cfg3(**kw):
+    base = dict(seed=3, max_events=20_000_000)
+    base.update(kw)
+    return three_tier_config(**base)
+
+
+def test_registry_contains_both_topologies():
+    assert "fat_tree" in TOPOLOGIES
+    assert "three_tier" in TOPOLOGIES
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology(SimConfig(topology="nope"))
+
+
+def test_three_tier_shape():
+    net = make_topology(cfg3())
+    # 4 pods x 2 leaves x 4 hosts, 2 aggs/pod, 4 cores
+    assert net.num_hosts == 32
+    assert net.num_switches == 8 + 8 + 4
+    assert net.is_leaf(0) and net.is_leaf(7)
+    assert net.is_agg(8) and net.is_agg(15)
+    assert not net.is_leaf(16) and not net.is_agg(16)
+    # oversubscribed: 4 host downlinks vs 2 agg uplinks per leaf
+    assert len(net.leaf_up[0]) == 2
+    assert net.is_up_port(0, 5) and not net.is_up_port(0, 3)
+
+
+@pytest.mark.parametrize("algo,n_trees", [
+    (Algo.CANARY, 1), (Algo.STATIC_TREE, 1), (Algo.STATIC_TREE, 4),
+    (Algo.RING, 1),
+])
+def test_three_tier_allreduce_correct(algo, n_trees):
+    sim = Simulator(cfg3(), [AllreduceJob(0, list(range(12)), 65536)],
+                    algo=algo, n_trees=n_trees)
+    r = sim.run()
+    assert r.correct
+    assert r.duration_ns > 0
+
+
+def test_three_tier_cross_pod_participants():
+    """Participants spread one per pod force 4-hop (leaf/agg/core) paths."""
+    cfg = cfg3()
+    parts = [0, 8, 16, 24]  # host 0 of each pod
+    sim = Simulator(cfg, [AllreduceJob(0, parts, 32768)], algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    # cross-pod traffic must traverse agg->core links
+    net = sim.net
+    core_bytes = sum(l.bytes_sent for row in net.agg_up for l in row)
+    assert core_bytes > 0
+
+
+def test_three_tier_reliability_drops():
+    cfg = cfg3(drop_prob=0.01, retx_timeout_ns=5e4, seed=5)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 16384)],
+                    algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+    assert r.dropped_packets > 0
+
+
+def test_three_tier_core_failure_recovered():
+    """A core switch dying mid-run is recovered by retransmission (§3.3)."""
+    cfg = cfg3(switch_fail_ns=2000.0, failed_switch=16,  # first core
+               retx_timeout_ns=5e4, seed=7)
+    parts = [0, 4, 8, 12, 16, 20, 24, 28]  # spread across all pods
+    sim = Simulator(cfg, [AllreduceJob(0, parts, 32768)], algo=Algo.CANARY)
+    r = sim.run()
+    assert r.correct
+
+
+def test_three_tier_mixed_collectives():
+    cfg = cfg3()
+    jobs = [
+        AllreduceJob(0, [0, 1, 2, 3], 16384),
+        AllreduceJob(1, [4, 5, 6, 7], 16384, collective="reduce", root=4),
+        AllreduceJob(2, [8, 9, 10, 11], 16384, collective="broadcast", root=8),
+        AllreduceJob(3, [12, 13, 14, 15], 0, collective="barrier"),
+    ]
+    r = Simulator(cfg, jobs, algo=Algo.CANARY).run()
+    assert r.correct
+    assert len(r.goodput_gbps) == 4
+
+
+def test_three_tier_through_compare_algorithms():
+    """Acceptance: a non-2-level topology runs the paper's core comparison
+    end-to-end, congestion included."""
+    out = compare_algorithms(cfg3(), 16, 65536, congestion=True, reps=1)
+    assert set(out) == {"ring", "static_1", "static_4", "canary"}
+    for name, res in out.items():
+        assert res.correct, name
+        assert res.goodput_gbps_mean > 0, name
+
+
+def test_three_tier_deterministic():
+    a = Simulator(cfg3(), [AllreduceJob(0, list(range(10)), 32768)],
+                  algo=Algo.CANARY).run()
+    b = Simulator(cfg3(), [AllreduceJob(0, list(range(10)), 32768)],
+                  algo=Algo.CANARY).run()
+    assert a.duration_ns == b.duration_ns and a.events == b.events
