@@ -112,6 +112,8 @@ class HostProtocol:
         if flags is None or flags[block]:
             return
         flags[block] = 1
+        if sim.trace is not None:
+            sim.trace.on_host_complete(host, app, block)
         if value != sim.expected_total(app, block):
             sim.mismatches += 1
         sim.app_remaining[app] -= 1
@@ -157,6 +159,8 @@ class HostProtocol:
                             value=total, dest_switch=sw_addr,
                             restore_ports=tuple(set(ports)),
                             size_bytes=cfg.mtu_bytes)
+                if sim.trace is not None:
+                    sim.trace.on_restore(pid, sw_addr, rp.restore_ports)
                 self.hosts[host].queue.append(rp)
         self.schedule_pump(host, sim.now)
 
@@ -178,11 +182,15 @@ class HostProtocol:
                 return  # stale generation or already reduced
             st.value += pkt.value
             st.counter += pkt.counter
+            if sim.trace is not None:
+                sim.trace.on_leader_merge(host, pkt)
             if pkt.switch_addr >= 0:
                 st.restorations.append((pkt.switch_addr, pkt.port_stamp))
             if st.counter >= len(sim.leaders[app]) - 1:
                 total = st.value + sim.contribution_of(app, block, host)
                 st.pending_done = True
+                if sim.trace is not None:
+                    sim.trace.on_leader_complete(host, app, block, gen)
                 # leader-side aggregation cost r (§3.2.2)
                 sim.engine.push(sim.now + sim.cfg.leader_aggregate_ns,
                                 EV_LEADER_DONE, host, 0, (app, block, total))
@@ -256,6 +264,8 @@ class HostProtocol:
                     hosts=len(sim.leaders[app]),
                     value=sim.contribution_of(app, block, host),
                     bypass=fallback, size_bytes=cfg.mtu_bytes, src=host)
+        if sim.trace is not None:
+            sim.trace.on_host_send(host, rp)
         self.hosts[host].queue.append(rp)
         sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
                         (app, block, gen))

@@ -57,6 +57,15 @@ class Simulator:
         self.rng = random.Random(cfg.seed)
         self.engine = EventLoop()
 
+        # opt-in aggregation-provenance recording (repro.core.trace). The
+        # recorder is observation-only: every layer guards its hook calls
+        # with ``sim.trace is not None`` and the hooks touch no protocol
+        # state, so traced runs replay the goldens bit-for-bit.
+        self.trace = None
+        if cfg.trace:
+            from ..trace.recorder import TraceRecorder  # deferred: optional
+            self.trace = TraceRecorder(self)
+
         # layers (construction order matters: strategies touch hostproto)
         self.switch = SwitchLayer(self, self.net.num_switches)
         self.hostproto = HostProtocol(self, cfg.num_hosts)

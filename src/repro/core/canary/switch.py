@@ -90,6 +90,8 @@ class SwitchLayer:
         sim = self.sim
         bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id, value=pkt.value,
                     multicast=True, size_bytes=sim.cfg.mtu_bytes)
+        if sim.trace is not None:
+            sim.trace.on_bcast_fanout(sw, bc, pkt.restore_ports)
         for port in pkt.restore_ports:
             sim.net.out_port_send(sim, sw, port, bc)
 
@@ -169,6 +171,8 @@ class AggregationStrategy:
                              hosts=len(sim.leaders[app]),
                              value=sim.contribution_of(app, nxt, host),
                              size_bytes=size, src=host)
+                if sim.trace is not None:
+                    sim.trace.on_host_send(host, pkt)
                 if self.uses_retx_timers:
                     # loss detection is part of the Canary protocol (§3.3);
                     # static-tree systems restart from scratch instead.
@@ -235,10 +239,14 @@ class CanaryStrategy(AggregationStrategy):
             if desc.sent:
                 # straggler (§3.1.1): forward immediately, keep child recorded
                 sim.stragglers += 1
+                if sim.trace is not None:
+                    sim.trace.on_straggler(sw, in_port, pkt)
                 sim.net.forward_toward_host(sim, sw, pkt)
             else:
                 desc.value += pkt.value
                 desc.counter += pkt.counter
+                if sim.trace is not None:
+                    sim.trace.on_switch_merge(sw, desc, in_port, pkt)
                 if desc.counter >= desc.hosts - 1:
                     self._fire_descriptor(sw, desc)  # all data received (§3.1.4)
             return
@@ -256,6 +264,8 @@ class CanaryStrategy(AggregationStrategy):
         if occupant is not None:
             # collision (§3.2.1): stamp and bypass straight to the leader
             sim.collisions += 1
+            if sim.trace is not None:
+                sim.trace.on_collision(sw, in_port, pkt)
             pkt.switch_addr = sw
             pkt.port_stamp = in_port
             pkt.bypass = True
@@ -268,6 +278,8 @@ class CanaryStrategy(AggregationStrategy):
         table[pid] = desc
         sl.slots[sw][slot] = pid
         sl.note_high_water(sw)
+        if sim.trace is not None:
+            sim.trace.on_desc_alloc(sw, desc, in_port, pkt)
         if desc.counter >= desc.hosts - 1:
             self._fire_descriptor(sw, desc)
             return
@@ -276,7 +288,8 @@ class CanaryStrategy(AggregationStrategy):
         sim.engine.push(sim.now + cfg.timeout_ns, EV_TIMER, sw, sl.timer_seq,
                         pid)
 
-    def _fire_descriptor(self, sw: int, desc: Descriptor) -> None:
+    def _fire_descriptor(self, sw: int, desc: Descriptor,
+                         reason: str = "complete") -> None:
         """Timeout (or early completion): forward the partial aggregate (§3.1.1)."""
         sim = self.sim
         desc.sent = True
@@ -284,10 +297,12 @@ class CanaryStrategy(AggregationStrategy):
         out = Packet(kind=PacketKind.REDUCE, dest=leader, id=desc.id,
                      counter=desc.counter, hosts=desc.hosts, value=desc.value,
                      size_bytes=sim.cfg.mtu_bytes)
+        if sim.trace is not None:
+            sim.trace.on_desc_flush(sw, desc, out, reason)
         sim.net.forward_toward_host(sim, sw, out)
 
     def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
-        self._fire_descriptor(sw, desc)
+        self._fire_descriptor(sw, desc, reason="timeout")
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
         sim = self.sim
@@ -296,6 +311,8 @@ class CanaryStrategy(AggregationStrategy):
             # collision happened here during reduce: drop; the leader's
             # restoration packet re-attaches this subtree (§3.2.1)
             return
+        if sim.trace is not None:
+            sim.trace.on_bcast_fanout(sw, pkt, desc.children)
         for port in desc.children:
             sim.net.out_port_send(sim, sw, port, pkt)
         sim.switch.dealloc(sw, desc)
@@ -347,18 +364,25 @@ class StaticTreeStrategy(AggregationStrategy):
         desc.value += pkt.value
         desc.counter += pkt.counter
         desc.last_ns = sim.now
+        if sim.trace is not None:
+            sim.trace.on_switch_merge(sw, desc, in_port, pkt)
         if len(desc.children) < desc.expected:
             return
         if sw != root:
             out = Packet(kind=PacketKind.REDUCE, dest=-1, id=pkt.id,
                          counter=desc.counter, hosts=pkt.hosts,
                          value=desc.value, size_bytes=sim.cfg.mtu_bytes)
+            if sim.trace is not None:
+                sim.trace.on_desc_flush(sw, desc, out, "complete")
             sim.net.static_send_up(sim, sw, root, out)
             desc.sent = True
         else:
             bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id,
                         value=desc.value, multicast=True,
                         size_bytes=sim.cfg.mtu_bytes)
+            if sim.trace is not None:
+                sim.trace.on_static_root_done(sw, desc)
+                sim.trace.on_bcast_fanout(sw, bc, desc.children)
             for port in desc.children:
                 sim.net.out_port_send(sim, sw, port, bc)
             table.pop(pkt.id, None)
@@ -369,6 +393,10 @@ class StaticTreeStrategy(AggregationStrategy):
         desc = table.get(pkt.id)
         if desc is None:
             return
+        if sim.trace is not None:
+            sim.trace.on_bcast_fanout(
+                sw, pkt,
+                [p for p in desc.children if not sim.net.is_up_port(sw, p)])
         for port in desc.children:
             if sim.net.is_up_port(sw, port):
                 continue  # never broadcast back up the tree

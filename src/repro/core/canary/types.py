@@ -85,6 +85,10 @@ class Packet:
     src: int = -1             # source host (for RETX_REQ / debugging)
     chunk: int = -1           # RING: chunk index
     step: int = -1            # RING: algorithm step
+    # Provenance tag set by the trace recorder (repro.core.trace) when
+    # SimConfig.trace is on: the TraceNode id whose aggregate this packet
+    # carries. Observation-only — never read by the protocol layers.
+    trace_node: int = -1
 
 
 # --- Block id packing -------------------------------------------------------
@@ -138,6 +142,7 @@ class Descriptor:
     alloc_ns: float = 0.0
     last_ns: float = 0.0
     timer_seq: int = 0            # guards against stale timer events
+    trace_node: int = -1          # trace recorder tag (see Packet.trace_node)
 
 
 @dataclass
@@ -210,6 +215,12 @@ class SimConfig:
     # -- experiment ------------------------------------------------------------
     seed: int = 0
     max_events: int = 200_000_000     # safety valve
+    # Opt-in aggregation-provenance recording (repro.core.trace): the run
+    # gains a ``Simulator.trace`` TraceRecorder that reconstructs the dynamic
+    # tree every block actually rode. Recording is observation-only — it
+    # touches no RNG draw, schedules no event and mutates no protocol state,
+    # so traced runs reproduce untraced ``SimResult``s bit-for-bit.
+    trace: bool = False
 
     # Derived ------------------------------------------------------------------
     @property

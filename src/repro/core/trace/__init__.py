@@ -1,0 +1,47 @@
+"""Trace-and-replay subsystem: record, compile and execute dynamic trees.
+
+Three stages (see ``ARCHITECTURE.md``):
+
+1. :mod:`~.recorder` — :class:`TraceRecorder`, attached by the simulator when
+   ``SimConfig(trace=True)``; reconstructs the dynamic tree every block
+   actually rode (observation-only: traced runs stay golden-identical).
+2. :mod:`~.schedule` — lowers a recorded :class:`BlockTree` into a
+   deterministic round-based :class:`Schedule` (reduce rounds = segment-sums,
+   broadcast rounds = mirrored copies).
+3. :mod:`~.executor` — replays a schedule on real arrays with the Pallas
+   kernels (``packet_accum`` for per-switch accumulation, ``fixedpoint`` for
+   the bit-identical int32 mode).
+
+The recorder and compiler are jax-free (importable next to the simulator);
+the executor pulls in jax lazily via module ``__getattr__``.
+
+Typical round trip::
+
+    cfg = scaled_config(4, trace=True)
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    sim.run()
+    scheds = compile_app(sim.trace, app=0)
+    out, q = fixed_point_replay(scheds, x)     # bit-identical int32 result
+"""
+from .recorder import (FLUSH_COMPLETE, FLUSH_TIMEOUT, HOST_SEND, LEADER,
+                       STATIC_ROOT, SWITCH_DESC, BlockTree, TraceNode,
+                       TraceRecorder)
+from .schedule import (CopyStep, ReduceStep, Schedule, compile_app,
+                       compile_block, schedule_report)
+
+_EXECUTOR_SYMBOLS = ("replay_block", "replay_app", "fixed_point_replay",
+                     "reference_allreduce")
+
+__all__ = [
+    "BlockTree", "CopyStep", "FLUSH_COMPLETE", "FLUSH_TIMEOUT", "HOST_SEND",
+    "LEADER", "ReduceStep", "STATIC_ROOT", "SWITCH_DESC", "Schedule",
+    "TraceNode", "TraceRecorder", "compile_app", "compile_block",
+    "schedule_report", *_EXECUTOR_SYMBOLS,
+]
+
+
+def __getattr__(name: str):
+    if name in _EXECUTOR_SYMBOLS:
+        from . import executor
+        return getattr(executor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

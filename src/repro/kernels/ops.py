@@ -43,18 +43,23 @@ def flash_attention_op(q, k, v, causal: bool = True, interpret: bool = True):
     return flash_attention(q, k, v, causal=causal, interpret=interpret)
 
 
+def fixed_point_scale(gmax, *, bits: int, world: int):
+    """Shared quantization scale for fixed-point reduction paths: ``gmax``
+    is the global max |x| across participants (every device must use the
+    same scale); headroom for ``world`` summands prevents int32 overflow."""
+    return (2.0 ** bits - 1.0) / (gmax * world + 1e-30)
+
+
 def fixed_point_allreduce_wrap(x: jnp.ndarray,
                                reduce_fn: Callable[[jnp.ndarray], jnp.ndarray],
                                gmax: jnp.ndarray, bits: int, world: int
                                ) -> jnp.ndarray:
     """Quantize -> integer reduce -> dequantize (paper §6 switch arithmetic).
 
-    ``gmax`` must be the *global* max |x| across the reduction participants
-    so every device uses the same scale; headroom for ``world`` summands
-    prevents int32 overflow. Integer addition is associative, so the result
-    is bit-identical for any dynamic tree shape.
+    Integer addition is associative, so the result is bit-identical for any
+    dynamic tree shape.
     """
-    scale = (2.0 ** bits - 1.0) / (gmax * world + 1e-30)
+    scale = fixed_point_scale(gmax, bits=bits, world=world)
     q = quantize(x, scale, interpret=not on_tpu())
     r = reduce_fn(q)
     return dequantize(r, scale, interpret=not on_tpu()).astype(x.dtype)

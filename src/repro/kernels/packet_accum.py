@@ -7,8 +7,14 @@ matmul per packet tile — the MXU performs the scatter-accumulate at full
 throughput, and the (slots, payload) accumulator block is revisited across
 grid steps (a standard Pallas accumulation pattern).
 
-Used by the software switch emulation benchmarks (Fig. 6) and validated
-against ``ref.packet_accumulate_ref`` over shape/dtype sweeps.
+Accumulation dtype follows the payload: int32 payloads accumulate (and
+return) int32 — the associative fixed-point path (§6: switch ALUs are
+integer-only) that makes dynamic-tree replay bit-deterministic — while float
+payloads accumulate in float32 as before.
+
+Used by the software switch emulation benchmarks (Fig. 6), the trace-replay
+executor (``repro.core.trace.executor``) and validated against
+``ref.packet_accumulate_ref`` over shape/dtype sweeps.
 """
 from __future__ import annotations
 
@@ -22,24 +28,44 @@ PKT_TILE = 128   # packets per grid step
 PAY_TILE = 128   # payload lanes
 
 
-def _accum_kernel(ids_ref, x_ref, o_ref, *, num_slots: int):
+def _accum_kernel(ids_ref, x_ref, o_ref, *, num_slots: int, acc_dtype):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     ids = ids_ref[...]                                   # (PKT_TILE,)
     onehot = (ids[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (ids.shape[0], num_slots), 1)).astype(jnp.float32)
+        jnp.int32, (ids.shape[0], num_slots), 1)).astype(acc_dtype)
     # MXU scatter-accumulate: (slots, pkts) @ (pkts, pay)
-    o_ref[...] += jnp.dot(onehot.T, x_ref[...].astype(jnp.float32),
-                          preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(onehot.T, x_ref[...].astype(acc_dtype),
+                          preferred_element_type=acc_dtype)
+
+
+def accumulate_dtype(payload_dtype) -> jnp.dtype:
+    """int32 payloads accumulate in int32 (associative); floats in float32.
+
+    Other integer dtypes are rejected: casting them to int32 would silently
+    wrap (int64/uint32) and the fixed-point contract is int32-exact.
+    """
+    if jnp.issubdtype(payload_dtype, jnp.integer):
+        if jnp.dtype(payload_dtype) != jnp.dtype(jnp.int32):
+            raise TypeError(f"integer payloads must be int32 (got "
+                            f"{jnp.dtype(payload_dtype).name}); quantize via "
+                            f"repro.kernels.fixedpoint first")
+        return jnp.int32
+    return jnp.float32
 
 
 def packet_accumulate(slot_ids: jnp.ndarray, payloads: jnp.ndarray,
                       num_slots: int, *, interpret: bool = True
                       ) -> jnp.ndarray:
-    """slot_ids: (N,) int32; payloads: (N, D) -> (num_slots, D) float32."""
+    """slot_ids: (N,) int32; payloads: (N, D) -> (num_slots, D).
+
+    Output dtype is :func:`accumulate_dtype` of the payload dtype: int32 for
+    integer payloads, float32 otherwise.
+    """
     n, d = payloads.shape
+    acc_dtype = accumulate_dtype(payloads.dtype)
     grid = -(-n // PKT_TILE)
     pad_n = grid * PKT_TILE - n
     ids = jnp.pad(slot_ids.astype(jnp.int32), (0, pad_n),
@@ -49,14 +75,14 @@ def packet_accumulate(slot_ids: jnp.ndarray, payloads: jnp.ndarray,
     if pad_d:
         pay = jnp.pad(pay, ((0, 0), (0, pad_d)))
     out = pl.pallas_call(
-        partial(_accum_kernel, num_slots=num_slots),
+        partial(_accum_kernel, num_slots=num_slots, acc_dtype=acc_dtype),
         grid=(grid,),
         in_specs=[
             pl.BlockSpec((PKT_TILE,), lambda i: (i,)),
             pl.BlockSpec((PKT_TILE, pay.shape[1]), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((num_slots, pay.shape[1]), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_slots, pay.shape[1]), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((num_slots, pay.shape[1]), acc_dtype),
         interpret=interpret,
     )(ids, pay)
     return out[:, :d]

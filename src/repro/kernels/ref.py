@@ -20,10 +20,13 @@ def packet_accumulate_ref(slot_ids: jnp.ndarray, payloads: jnp.ndarray,
     packet's payload into its descriptor slot.
 
     slot_ids: (N,) int32 in [0, num_slots); payloads: (N, D).
-    Returns (num_slots, D) accumulators.
+    Returns (num_slots, D) accumulators — int32 for int32 payloads (the
+    associative fixed-point path), float32 otherwise. The dtype policy is
+    API contract, not math, so it is shared with the kernel.
     """
-    return jax.ops.segment_sum(payloads.astype(jnp.float32), slot_ids,
-                               num_segments=num_slots)
+    from .packet_accum import accumulate_dtype
+    return jax.ops.segment_sum(payloads.astype(accumulate_dtype(payloads.dtype)),
+                               slot_ids, num_segments=num_slots)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,246 @@
+"""TraceRecorder tests: observation-only contract + conservation invariant.
+
+Two pillars:
+
+* **Traced golden replay** — every golden-replay scenario re-run with
+  ``SimConfig.trace=True`` must reproduce its pinned ``SimResult``
+  bit-for-bit: recording observes the run, it never perturbs it.
+* **Conservation** — for every completed block, the recorded tree proves each
+  participant's contribution was aggregated exactly once (no loss, no
+  double-count), across CANARY/STATIC_TREE, fat_tree/three_tier, drops,
+  collisions, stragglers, retransmission generations and switch failures.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "core"))
+
+from collections import Counter
+
+from golden_cases import CASES, _cfg, _jobs, load_goldens, result_to_jsonable
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               scaled_config, three_tier_config)
+from repro.core.trace import HOST_SEND, LEADER, STATIC_ROOT
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+# ------------------------------------------------------ traced golden replay
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_goldens_unchanged_with_tracing(name, goldens):
+    """Recording is observation-only: the traced run's SimResult is
+    bit-identical to the untraced golden."""
+    cfg_kw, jobs_spec, algo, n_trees, noise = CASES[name]
+    cfg = _cfg(**cfg_kw)
+    cfg.trace = True
+    sim = Simulator(cfg, _jobs(jobs_spec), algo=algo, n_trees=n_trees,
+                    noise_hosts=noise)
+    got = result_to_jsonable(sim.run())
+    want = goldens[name]
+    for field in sorted(want):
+        assert got[field] == want[field], f"{name}: field {field!r} diverged"
+    assert got == want
+    if algo != Algo.RING:  # host-based runs record nothing
+        assert len(sim.trace.nodes) > 0
+
+
+# ------------------------------------------------------------- conservation
+def _run_traced(cfg: SimConfig, jobs, algo, n_trees=1, noise=None):
+    cfg.trace = True
+    sim = Simulator(cfg, jobs, algo=algo, n_trees=n_trees, noise_hosts=noise)
+    result = sim.run()
+    assert result.correct, "simulation itself must be correct"
+    return sim
+
+
+def _assert_conservation(sim, expect_blocks=None):
+    keys = sim.trace.block_keys()
+    if expect_blocks is not None:
+        assert len(keys) == expect_blocks, (len(keys), expect_blocks)
+    assert keys, "no completed blocks recorded"
+    for app, block in keys:
+        tree = sim.trace.block_tree(app, block)
+        tree.check_conservation()
+        # leaves are exactly the participants, once each
+        leaf_hosts = Counter(n.where for n in tree.leaves())
+        assert leaf_hosts == Counter({h: 1 for h in tree.participants})
+
+
+FABRICS = {
+    "fat_tree": lambda **kw: scaled_config(4, **kw),
+    "three_tier": lambda **kw: three_tier_config(**kw),
+}
+
+
+@pytest.mark.parametrize("fabric", sorted(FABRICS))
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE])
+def test_conservation_basic(fabric, algo):
+    cfg = FABRICS[fabric](seed=7, timeout_ns=300.0)
+    jobs = [AllreduceJob(app=0, participants=list(range(0, 16, 2)),
+                         data_bytes=16384)]
+    sim = _run_traced(cfg, jobs, algo)
+    _assert_conservation(sim, expect_blocks=16)
+    # every participant received the broadcast result
+    assert sim.trace.delivered[(0, 0)] == set(range(0, 16, 2))
+
+
+@pytest.mark.parametrize("fabric", sorted(FABRICS))
+def test_conservation_under_drops(fabric):
+    """Loss recovery (§3.3) re-issues contributions under fresh generations;
+    the completed generation still aggregates each host exactly once."""
+    cfg = FABRICS[fabric](seed=5, drop_prob=0.01, retx_timeout_ns=5e4)
+    jobs = [AllreduceJob(app=0, participants=list(range(10)),
+                         data_bytes=16384)]
+    sim = _run_traced(cfg, jobs, Algo.CANARY)
+    _assert_conservation(sim)
+
+
+# Failed switches must have path redundancy the LB can route around: a spine
+# on the 4-leaf fat tree (id 5), a core on the default three-tier (id 17 —
+# 8 leaves + 8 aggs, then cores). Killing a leaf would strand its hosts; an
+# agg can pin capped-generation flow hashes onto the dead path.
+@pytest.mark.parametrize("fabric,failed_switch", [("fat_tree", 5),
+                                                  ("three_tier", 17)])
+def test_conservation_under_switch_failure(fabric, failed_switch):
+    cfg = FABRICS[fabric](seed=3, switch_fail_ns=2000.0,
+                          failed_switch=failed_switch, retx_timeout_ns=5e4,
+                          max_events=20_000_000)
+    jobs = [AllreduceJob(app=0, participants=list(range(10)),
+                         data_bytes=32768)]
+    sim = _run_traced(cfg, jobs, Algo.CANARY)
+    _assert_conservation(sim)
+    assert sim.trace.timeout_flushes + sim.trace.complete_flushes > 0
+
+
+def test_conservation_with_collisions_and_restoration():
+    """table_size=1 forces descriptor collisions: bypassed contributions
+    merge at the leader and restorations fan the result back out."""
+    cfg = scaled_config(4, seed=11, table_size=1)
+    jobs = [AllreduceJob(app=0, participants=list(range(8)),
+                         data_bytes=16384)]
+    sim = _run_traced(cfg, jobs, Algo.CANARY)
+    _assert_conservation(sim)
+    assert sim.trace.collisions > 0
+    assert sim.trace.restores, "collisions must trigger restorations"
+
+
+def test_conservation_under_congestion_noise():
+    cfg = scaled_config(4, seed=13, noise_prob=0.05, timeout_ns=200.0)
+    jobs = [AllreduceJob(app=0, participants=list(range(8)),
+                         data_bytes=32768)]
+    sim = _run_traced(cfg, jobs, Algo.CANARY, noise=list(range(8, 16)))
+    _assert_conservation(sim)
+
+
+def test_conservation_static_four_trees_three_tier():
+    cfg = three_tier_config(seed=17)
+    jobs = [AllreduceJob(app=0, participants=list(range(12)),
+                         data_bytes=16384)]
+    sim = _run_traced(cfg, jobs, Algo.STATIC_TREE, n_trees=4)
+    _assert_conservation(sim)
+    roots = {sim.trace.block_tree(a, b).nodes[
+        sim.trace.block_tree(a, b).root].kind
+        for a, b in sim.trace.block_keys()}
+    assert roots == {STATIC_ROOT}
+
+
+def test_conservation_multiapp_and_mixed_collectives():
+    cfg = scaled_config(4, seed=2, table_size=8192)
+    jobs = [AllreduceJob(app=0, participants=[0, 1, 2, 3], data_bytes=16384),
+            AllreduceJob(app=1, participants=[4, 5, 6, 7], data_bytes=16384,
+                         collective="reduce", root=4),
+            AllreduceJob(app=2, participants=[8, 9, 10, 11], data_bytes=16384,
+                         collective="broadcast", root=8),
+            AllreduceJob(app=3, participants=[12, 13, 14, 15], data_bytes=0,
+                         collective="barrier")]
+    sim = _run_traced(cfg, jobs, Algo.CANARY)
+    _assert_conservation(sim)
+    apps = {a for a, _ in sim.trace.block_keys()}
+    assert apps == {0, 1, 2, 3}
+
+
+def test_conservation_with_fallback_generations():
+    """A hopeless timeout drives generations to the host-based fallback
+    (§3.3): the completed tree is leader-direct, still exactly-once."""
+    cfg = scaled_config(4, seed=11, timeout_ns=1e6, retx_timeout_ns=2e5)
+    jobs = [AllreduceJob(app=0, participants=list(range(10)),
+                         data_bytes=4096)]
+    sim = _run_traced(cfg, jobs, Algo.CANARY)
+    _assert_conservation(sim)
+    gens = [sim.trace.block_tree(a, b).gen for a, b in sim.trace.block_keys()]
+    assert max(gens) > 0, "expected retransmission generations"
+
+
+if HAVE_HYP:
+    @given(seed=st.integers(0, 1000),
+           timeout_ns=st.sampled_from([50.0, 300.0, 1000.0, 5000.0]))
+    @settings(max_examples=10, deadline=None)
+    def test_conservation_property(seed, timeout_ns):
+        cfg = scaled_config(4, seed=seed, timeout_ns=timeout_ns,
+                            noise_prob=0.05)
+        jobs = [AllreduceJob(app=0, participants=list(range(8)),
+                             data_bytes=8192)]
+        sim = _run_traced(cfg, jobs, Algo.CANARY,
+                          noise=list(range(8, 12)))
+        _assert_conservation(sim, expect_blocks=8)
+
+
+# -------------------------------------------------------------- recorder API
+def test_recorder_counters_match_simresult():
+    cfg = scaled_config(4, seed=11, table_size=1, trace=True)
+    jobs = [AllreduceJob(app=0, participants=list(range(8)),
+                         data_bytes=16384)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    result = sim.run()
+    assert sim.trace.collisions == result.collisions
+    assert sim.trace.stragglers == result.stragglers
+
+
+def test_tree_structure_and_summary():
+    cfg = scaled_config(4, seed=3, timeout_ns=200.0, trace=True)
+    jobs = [AllreduceJob(app=0, participants=list(range(8)),
+                         data_bytes=8192)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    assert sim.run().correct
+    tree = sim.trace.block_tree(0, 0)
+    root = tree.nodes[tree.root]
+    assert root.kind == LEADER
+    assert tree.depth() >= 1
+    assert all(n.kind == HOST_SEND for n in tree.leaves())
+    assert "depth=" in tree.summary()
+    deepest = sim.trace.deepest_tree()
+    assert deepest is not None
+    assert deepest.depth() >= tree.depth()
+    assert "completed blocks" in sim.trace.summary()
+
+
+def test_ring_records_nothing():
+    cfg = scaled_config(4, seed=0, trace=True)
+    jobs = [AllreduceJob(app=0, participants=list(range(6)),
+                         data_bytes=8192)]
+    sim = Simulator(cfg, jobs, algo=Algo.RING)
+    assert sim.run().correct
+    assert sim.trace.block_keys() == []
+    with pytest.raises(KeyError):
+        sim.trace.block_tree(0, 0)
+
+
+def test_untraced_run_has_no_recorder():
+    cfg = scaled_config(4, seed=0)
+    jobs = [AllreduceJob(app=0, participants=list(range(4)),
+                         data_bytes=4096)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    assert sim.trace is None
+    assert sim.run().correct

@@ -1,0 +1,173 @@
+"""Schedule compiler + JAX executor tests.
+
+The headline acceptance check lives here: replaying one set of inputs in
+fixed-point mode across trees recorded under **different seeds/timeouts**
+(i.e. different dynamic tree shapes, including the host-based fallback
+shape) yields **bit-identical int32 results**, which dequantize to the float
+reference allreduce within quantization tolerance.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canary import Algo, AllreduceJob, Simulator, scaled_config
+from repro.core.trace import (compile_app, compile_block, fixed_point_replay,
+                              reference_allreduce, replay_app, replay_block,
+                              schedule_report)
+
+P = 10          # participants
+BLOCK_BYTES = 1024
+N_BLOCKS = 4
+D = 32          # elements per block used for replay
+
+
+def _traced_run(algo=Algo.CANARY, *, noise=None, **cfg_kw):
+    base = dict(seed=3, timeout_ns=200.0)
+    base.update(cfg_kw)
+    cfg = scaled_config(4, trace=True, **base)
+    jobs = [AllreduceJob(app=0, participants=list(range(P)),
+                         data_bytes=N_BLOCKS * BLOCK_BYTES)]
+    sim = Simulator(cfg, jobs, algo=algo, noise_hosts=noise)
+    assert sim.run().correct
+    return sim
+
+
+# Three worlds that provably form different trees: aggressive timeouts with
+# sender noise, a hopeless timeout that ends in the §3.3 host-based fallback,
+# and a mid-range window (verified distinct by test_tree_shapes_differ).
+VARIANTS = [
+    dict(seed=3, timeout_ns=50.0, noise_prob=0.2),
+    dict(seed=11, timeout_ns=1e6, retx_timeout_ns=2e5),
+    dict(seed=29, timeout_ns=500.0, noise_prob=0.05),
+]
+
+
+def _shape_signature(schedules):
+    return tuple((s.depth,
+                  tuple(sorted(len(st.srcs) for r in s.reduce_rounds
+                               for st in r)))
+                 for s in schedules)
+
+
+@pytest.fixture(scope="module")
+def variant_schedules():
+    out = []
+    for kw in VARIANTS:
+        sim = _traced_run(noise=list(range(P, 16)), **kw)
+        out.append(compile_app(sim.trace, 0))
+    return out
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    return jax.random.normal(jax.random.PRNGKey(0),
+                             (P, N_BLOCKS, D)) * 3.0
+
+
+# ------------------------------------------------------------- compile shape
+def test_compile_round_invariants(variant_schedules):
+    """Rounds are a valid dataflow order: every source buffer is a leaf or
+    was produced in a strictly earlier round; destinations are unique."""
+    for schedules in variant_schedules:
+        assert len(schedules) == N_BLOCKS
+        for s in schedules:
+            ready = set(s.leaf_host)
+            for rnd in s.reduce_rounds:
+                dsts = [step.dst for step in rnd]
+                assert len(dsts) == len(set(dsts))
+                for step in rnd:
+                    assert all(src in ready for src in step.srcs)
+                ready.update(dsts)
+            assert s.root in ready
+            assert sorted(set(s.leaf_host.values())) == s.hosts
+
+
+def test_tree_shapes_differ(variant_schedules):
+    sigs = {_shape_signature(s) for s in variant_schedules}
+    assert len(sigs) >= 2, "variants were supposed to produce distinct trees"
+
+
+def test_schedule_report(variant_schedules):
+    rep = schedule_report(variant_schedules[0], BLOCK_BYTES)
+    assert rep["blocks"] == N_BLOCKS
+    assert rep["depth_max"] >= 1
+    assert rep["bytes_moved"] == rep["messages"] * BLOCK_BYTES
+
+
+# ------------------------------------------------------------- float replay
+def test_float_replay_matches_reference(variant_schedules, inputs):
+    for schedules in variant_schedules:
+        out = replay_app(schedules, inputs)
+        ref = reference_allreduce(inputs.reshape(P, -1)).reshape(inputs.shape)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_single_block_replay(variant_schedules, inputs):
+    s = variant_schedules[0][0]
+    out = replay_block(s, inputs[:, 0])
+    want = jnp.sum(inputs[:, 0], axis=0)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(np.asarray(want), (P, D)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_replay_rejects_wrong_shapes(variant_schedules, inputs):
+    with pytest.raises(ValueError):
+        replay_block(variant_schedules[0][0], inputs[:P - 1, 0])
+    with pytest.raises(ValueError):
+        replay_app(variant_schedules[0][:2], inputs)
+
+
+# ------------------------------------------- fixed-point determinism (§6)
+def test_fixed_point_bit_identical_across_tree_shapes(variant_schedules,
+                                                      inputs):
+    """The acceptance claim: identical int32 results no matter which dynamic
+    tree the congested fabric produced, and floats within quantization
+    tolerance of the reference."""
+    bits = 20
+    q_results = []
+    for schedules in variant_schedules:
+        out, q = fixed_point_replay(schedules, inputs, bits=bits)
+        q_results.append(np.asarray(q))
+        assert q.dtype == jnp.int32
+        ref = reference_allreduce(inputs.reshape(P, -1)).reshape(inputs.shape)
+        # each of P quantized summands carries <= 0.5/scale rounding error
+        from repro.kernels.ops import fixed_point_scale
+        gmax = float(jnp.max(jnp.abs(inputs)))
+        scale = fixed_point_scale(gmax, bits=bits, world=P)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=(P + 1) * 0.5 / scale)
+    for q in q_results[1:]:
+        np.testing.assert_array_equal(q_results[0], q)
+
+
+def test_int32_replay_is_exact_sum(variant_schedules):
+    """Integer accumulation over the tree equals the direct sum exactly."""
+    q = jax.random.randint(jax.random.PRNGKey(7), (P, N_BLOCKS, D),
+                           -1_000_000, 1_000_000, dtype=jnp.int32)
+    for schedules in variant_schedules:
+        out = replay_app(schedules, q)
+        assert out.dtype == jnp.int32
+        want = jnp.sum(q, axis=0)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.broadcast_to(np.asarray(want), q.shape))
+
+
+def test_static_tree_replay(inputs):
+    sim = _traced_run(algo=Algo.STATIC_TREE)
+    schedules = compile_app(sim.trace, 0)
+    out = replay_app(schedules, inputs)
+    ref = reference_allreduce(inputs.reshape(P, -1)).reshape(inputs.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_compile_block_direct():
+    sim = _traced_run()
+    tree = sim.trace.block_tree(0, 0)
+    s = compile_block(tree)
+    assert s.depth == tree.depth()
+    assert s.timeout_flushes == tree.timeout_flushes()
