@@ -1,0 +1,116 @@
+"""Fleet suite: multi-tenant allreduce with open-loop arrivals and enforced
+switch-memory quotas (§3.2.2/§3.4, plus the Flare/Segal multi-tenancy
+direction).
+
+Sweeps tenant count x arrival rate x quota policy x algorithm
+(CANARY / STATIC_TREE / RING) on both registered fabrics (``fat_tree`` and
+``three_tier``) and reports the per-job QoS currency multi-tenant designs
+are compared on: mean JCT, mean slowdown vs an uncontended run, Jain's
+fairness index across tenants, and degradation counts. Every cell also
+asserts exactness — a fleet run is a correctness proof, not just a timing.
+
+Writes ``FLEET_RESULTS.json`` (``FLEET_JSON=`` to move it); registered as
+the ``fleet`` suite in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+from typing import List
+
+from repro.core.canary import Algo, TenantSpec, three_tier_config
+
+from .common import FAST, bench_cfg, emit, timed
+
+
+def _topologies():
+    yield "fat_tree", bench_cfg()
+    if FAST:
+        yield "three_tier", three_tier_config(hosts_per_leaf=4)
+    else:
+        yield "three_tier", three_tier_config(num_pods=4, leaves_per_pod=2,
+                                              hosts_per_leaf=8,
+                                              aggs_per_pod=2, num_cores=4)
+
+
+def _tenants(n: int) -> List[TenantSpec]:
+    """Mixed priorities: tenant 0 gets a 6x share, the last tenant is
+    squeezed below one job's slot demand, the rest share equally."""
+    specs = [TenantSpec(0, weight=6.0, name="priority")]
+    specs += [TenantSpec(t, weight=1.0) for t in range(1, n - 1)]
+    specs.append(TenantSpec(n - 1, weight=0.02, name="constrained"))
+    return specs
+
+
+def _scenario(cfg, tenants, mean_interarrival_ns: float, algo: Algo,
+              policy: str, seed: int):
+    from repro.core.fleet import FleetScenario, make_jobs, poisson_arrivals
+    rng = random.Random(seed)
+    jobs_per_tenant = 1 if FAST else 2
+    hosts_per_job = max(4, cfg.num_hosts // (2 * len(tenants)))
+    data = 16384 if FAST else 131072
+    jobs = []
+    for t in tenants:
+        arr = poisson_arrivals(jobs_per_tenant, mean_interarrival_ns, rng=rng)
+        jobs += make_jobs(t, arr, range(cfg.num_hosts), hosts_per_job, data,
+                          rng=rng, app_base=t.tenant * 100)
+    return FleetScenario(cfg=cfg, tenants=tenants, jobs=jobs, algo=algo,
+                         quota_policy=policy)
+
+
+def main() -> None:
+    from repro.core.fleet import FleetDriver
+    tenant_counts = (4,) if FAST else (4, 8)
+    rates_ns = (20_000.0,) if FAST else (20_000.0, 5_000.0)
+    policies = ("none", "weighted")
+    algos = ((Algo.CANARY, "canary"), (Algo.STATIC_TREE, "static1"),
+             (Algo.RING, "ring"))
+    cells = []
+    for topo, cfg in _topologies():
+        for n_tenants in tenant_counts:
+            for rate in rates_ns:
+                for policy in policies:
+                    for algo, label in algos:
+                        scenario = _scenario(cfg, _tenants(n_tenants), rate,
+                                             algo, policy, seed=1)
+                        fr, us = timed(FleetDriver(scenario).run)
+                        sd = f"{fr.mean_slowdown:.2f}" \
+                            if fr.mean_slowdown is not None else "nan"
+                        name = (f"fleet/{topo}/{label}/tenants={n_tenants}/"
+                                f"rate={int(rate/1000)}us/quota={policy}")
+                        emit(name, us,
+                             f"mean_jct_us={fr.mean_jct_ns/1e3:.1f};"
+                             f"slowdown={sd};jain={fr.jain_fairness:.3f};"
+                             f"degraded={fr.degraded_jobs};"
+                             f"correct={fr.correct}")
+                        cells.append({
+                            "topology": topo, "algo": label,
+                            "tenants": n_tenants,
+                            "mean_interarrival_ns": rate,
+                            "quota_policy": policy,
+                            "jobs": len(fr.jobs),
+                            "mean_jct_ns": fr.mean_jct_ns,
+                            "max_jct_ns": fr.max_jct_ns,
+                            "mean_slowdown": fr.mean_slowdown,
+                            "jain_fairness": fr.jain_fairness,
+                            "degraded_jobs": fr.degraded_jobs,
+                            "deferred_jobs": fr.deferred_jobs,
+                            "correct": fr.correct,
+                            "per_tenant": {str(t): d for t, d in
+                                           fr.per_tenant.items()},
+                            "wall_us": us,
+                        })
+    doc = {"suite": "fleet", "fast": FAST, "cells": cells}
+    path = os.environ.get("FLEET_JSON", "FLEET_RESULTS.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    bad = [c for c in cells if not c["correct"]]
+    if bad:
+        raise SystemExit(f"fleet suite: {len(bad)} incorrect cells: "
+                         f"{[c['topology'] + '/' + c['algo'] for c in bad]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,9 +17,9 @@ from .switch import (ALGORITHMS, AggregationStrategy, CanaryStrategy,
 from .topology import (TOPOLOGIES, Link, ThreeTierFatTree, Topology,
                        make_topology, register_topology)
 from .types import (Algo, AllreduceJob, Descriptor, LoadBalancing, Packet,
-                    PacketKind, SimConfig, SimResult, block_key, id_app,
-                    id_block, id_gen, make_id, paper_config, scaled_config,
-                    three_tier_config)
+                    PacketKind, SimConfig, SimResult, TenantSpec, block_key,
+                    id_app, id_block, id_gen, make_id, paper_config,
+                    scaled_config, three_tier_config)
 from .workloads import CongestionWorkload
 
 __all__ = [
@@ -28,7 +28,7 @@ __all__ = [
     "ExperimentResult", "FatTree", "HostProtocol", "Link", "LoadBalancing",
     "OccupancyModel", "Packet", "PacketKind", "RingStrategy", "SimConfig",
     "SimResult", "Simulator", "StaticTreeStrategy", "SwitchLayer",
-    "TOPOLOGIES", "ThreeTierFatTree", "Topology", "block_key",
+    "TOPOLOGIES", "TenantSpec", "ThreeTierFatTree", "Topology", "block_key",
     "compare_algorithms", "contribution", "id_app", "id_block", "id_gen",
     "make_id", "make_strategy", "make_topology", "model_for", "paper_example",
     "paper_config", "register_algorithm", "register_topology",

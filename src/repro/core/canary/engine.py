@@ -19,6 +19,7 @@ EV_PUMP = 3           # a=host
 EV_RETX = 4           # a=host, c=(app, block, gen)
 EV_FAIL_SWITCH = 5    # a=switch
 EV_LEADER_DONE = 6    # a=leader host, c=(app, block, total)
+EV_JOB_ARRIVE = 7     # a=app (open-loop job arrival; fleet subsystem)
 
 Handler = Callable[[int, int, object], None]
 

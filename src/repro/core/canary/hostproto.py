@@ -119,7 +119,7 @@ class HostProtocol:
         sim.app_remaining[app] -= 1
         sim.completed_blocks += 1
         if sim.app_remaining[app] == 0:
-            sim.app_done_ns[app] = sim.now
+            sim.job_finished(app)
 
     # ---------------------------------------------------------- leader role
     def leader_block_done(self, host: int, app: int, block: int,
@@ -136,7 +136,7 @@ class HostProtocol:
             return  # §6: a reduce skips the broadcast phase entirely
         pid = make_id(app, block, st.gen)
         cfg = sim.cfg
-        if key in self.fallback_blocks:
+        if key in self.fallback_blocks or app in sim.bypass_apps:
             # host-based fallback (§3.3): no descriptors exist — unicast result
             for h in sim.leaders[app]:
                 if h == host:
@@ -231,6 +231,10 @@ class HostProtocol:
         if fallback and key not in self.fallback_blocks:
             sim.fallbacks += 1
             self.fallback_blocks.add(key)
+            if app not in sim.bypass_apps:
+                # admission-degraded apps were counted whole at activation
+                sim.app_fallback_blocks[app] = \
+                    sim.app_fallback_blocks.get(app, 0) + 1
         st.gen = newgen
         st.value = 0
         st.counter = 0
@@ -258,7 +262,7 @@ class HostProtocol:
             return
         self.host_gen[hkey] = gen
         sim.retransmissions += 1
-        fallback = pkt.counter == 1
+        fallback = pkt.counter == 1 or app in sim.bypass_apps
         rp = Packet(kind=PacketKind.REDUCE, dest=sim.leader_of(app, block),
                     id=make_id(app, block, gen), counter=1,
                     hosts=len(sim.leaders[app]),
@@ -409,4 +413,4 @@ class RingStrategy(AggregationStrategy):
         sim.app_remaining[app] -= newly
         sim.completed_blocks += newly
         if sim.app_remaining[app] == 0:
-            sim.app_done_ns[app] = sim.now
+            sim.job_finished(app)

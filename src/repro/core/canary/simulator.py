@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from . import network as _network  # noqa: F401  (registers "fat_tree")
 from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
-                     EV_LEADER_DONE, EV_PUMP, EV_RETX, EV_TIMER, EventLoop)
+                     EV_JOB_ARRIVE, EV_LEADER_DONE, EV_PUMP, EV_RETX,
+                     EV_TIMER, EventLoop)
 from .hostproto import HostProtocol
 from .switch import SwitchLayer, make_strategy
 from .topology import make_topology
@@ -44,7 +45,8 @@ class Simulator:
 
     def __init__(self, cfg: SimConfig, jobs: List[AllreduceJob],
                  algo: Algo = Algo.CANARY, n_trees: int = 1,
-                 noise_hosts: Optional[List[int]] = None):
+                 noise_hosts: Optional[List[int]] = None,
+                 admission=None):
         cfg.validate()
         self.cfg = cfg
         self.jobs = {j.app: j for j in jobs}
@@ -71,6 +73,19 @@ class Simulator:
         self.hostproto = HostProtocol(self, cfg.num_hosts)
         self.workload = CongestionWorkload(self, noise_hosts)
         self.strategy = make_strategy(self.algo, self)
+
+        # multi-tenant fleet state (repro.core.fleet). With no admission
+        # controller everything below stays empty and the dataplane behaves
+        # exactly as before — the fleet layer is pay-for-what-you-use.
+        self.admission = admission
+        self.tenant_of: Dict[int, int] = {}            # app -> tenant
+        self.slot_regions: Dict[int, Tuple[int, int]] = {}  # app -> (offset, size)
+        self.bypass_apps: Set[int] = set()             # degraded: host-based §3.3 path
+        self.job_submit_ns: Dict[int, float] = {}
+        self.job_start_ns: Dict[int, float] = {}
+        self.app_fallback_blocks: Dict[int, int] = {}
+        if admission is not None:
+            admission.attach(self)
 
         # completion tracking
         self.have: Dict[Tuple[int, int], bytearray] = {}
@@ -105,8 +120,13 @@ class Simulator:
             self.blocks[app] = B
             self.partset[app] = set(parts)
             self.leaders[app] = parts
+            self.tenant_of[app] = job.tenant if job.tenant >= 0 else app
             s1 = sum(h + 1 for h in parts)
             self.contrib_sum_base[app] = (s1, len(parts))
+            self.job_submit_ns[app] = max(0.0, job.arrival_ns)
+            # completion tracking is registered up front for every job —
+            # including ones that arrive later — so ``all_done`` keeps the
+            # engine running until open-loop arrivals have completed too.
             if job.collective == "reduce":
                 root = job.root if job.root is not None else parts[0]
                 self.have[(app, root)] = bytearray(B)
@@ -115,21 +135,51 @@ class Simulator:
                 for h in parts:
                     self.have[(app, h)] = bytearray(B)
                 self.app_remaining[app] = len(parts) * B
-            if len(parts) == 1:
-                # degenerate single-participant allreduce: already reduced
-                h = parts[0]
-                flags = self.have[(app, h)]
-                for b in range(B):
-                    flags[b] = 1
-                self.app_remaining[app] = 0
-                self.app_done_ns[app] = 0.0
-                self.completed_blocks += B
-                continue
-            self.strategy.setup_job(app, job, parts)
+            if job.arrival_ns > 0.0:
+                self.engine.push(job.arrival_ns, EV_JOB_ARRIVE, app, 0, None)
+            else:
+                self._activate_job(app)
         self.workload.start()
         if cfg.switch_fail_ns is not None and cfg.failed_switch is not None:
             self.engine.push(cfg.switch_fail_ns, EV_FAIL_SWITCH,
                              cfg.failed_switch, 0, None)
+
+    def _activate_job(self, app: int) -> None:
+        """Start ``app``'s protocol: at construction (t=0 jobs), when its
+        ``EV_JOB_ARRIVE`` fires, or when the admission controller retries a
+        deferred job after capacity frees up."""
+        job = self.jobs[app]
+        parts = self.leaders[app]
+        B = self.blocks[app]
+        if len(parts) == 1:
+            # degenerate single-participant collective: already reduced
+            h = parts[0]
+            flags = self.have[(app, h)]
+            for b in range(B):
+                flags[b] = 1
+            self.app_remaining[app] = 0
+            self.completed_blocks += B
+            self.job_start_ns[app] = self.now
+            self.app_done_ns[app] = self.now
+            return
+        if self.admission is not None:
+            decision = self.admission.on_job_arrival(self, app, job)
+            if decision == "defer":
+                return  # retried via on_job_done when a slot frees up
+            if decision == "degrade":
+                # quota exhausted: the whole job rides the §3.3 host-based
+                # path (bypass packets, leader unicasts the result)
+                self.bypass_apps.add(app)
+                self.app_fallback_blocks[app] = B
+        self.job_start_ns[app] = self.now
+        self.strategy.setup_job(app, job, parts)
+
+    def job_finished(self, app: int) -> None:
+        """All of ``app``'s blocks completed: stamp the finish time and give
+        the admission controller its quota slots back."""
+        self.app_done_ns[app] = self.now
+        if self.admission is not None:
+            self.admission.on_job_done(self, app)
 
     # ------------------------------------------------------------- protocol
     def expected_total(self, app: int, block: int) -> int:
@@ -207,13 +257,16 @@ class Simulator:
             EV_RETX: self._handle_retx,
             EV_FAIL_SWITCH: lambda a, b, c: self.switch.fail_switch(a),
             EV_LEADER_DONE: self._handle_leader_done,
+            EV_JOB_ARRIVE: lambda a, b, c: self._activate_job(a),
         }
         self.engine.run(handlers, self.all_done, cfg.max_events)
         end = max(self.app_done_ns.values()) if self.app_done_ns else self.now
         utils = self.net.utilizations(end if end > 0 else 1.0)
         goodput = {}
         for app, job in self.jobs.items():
-            dur = self.app_done_ns.get(app, self.now)
+            # JCT, not absolute finish: identical for t=0 jobs, and the only
+            # meaningful denominator for open-loop (late-arriving) jobs
+            dur = self.app_done_ns.get(app, self.now) - self.job_submit_ns[app]
             goodput[app] = (job.data_bytes * 8.0) / dur if dur > 0 else 0.0
         maxdesc = max(self.switch.desc_high) if self.switch.desc_high else 0
         return SimResult(
@@ -233,4 +286,10 @@ class Simulator:
             events=self.events,
             dropped_packets=self.dropped,
             completed_blocks=self.completed_blocks,
+            job_submit_ns=dict(self.job_submit_ns),
+            job_start_ns=dict(self.job_start_ns),
+            job_finish_ns=dict(self.app_done_ns),
+            job_admitted={a: a not in self.bypass_apps for a in self.jobs},
+            app_fallback_blocks=dict(self.app_fallback_blocks),
+            tenant_of=dict(self.tenant_of),
         )

@@ -137,17 +137,26 @@ class AggregationStrategy:
     algo: Algo
     leader_skips_self = False  # CANARY: the leader keeps its contribution local
     uses_retx_timers = False   # CANARY: host-side loss detection (§3.3)
+    # True when the strategy allocates per-switch descriptors — the resource
+    # the fleet admission controller budgets (§3.2.2). Host-based strategies
+    # (RING) keep the default and are always admitted without a quota.
+    uses_switch_memory = False
 
     def __init__(self, sim):
         self.sim = sim
 
     # ---- job setup ---------------------------------------------------------
     def setup_job(self, app: int, job, parts: List[int]) -> None:
-        """Default: every participant streams its blocks via a lazy cursor."""
-        hp = self.sim.hostproto
+        """Default: every participant streams its blocks via a lazy cursor.
+
+        Pumps are scheduled at ``sim.now`` — 0.0 for construction-time jobs,
+        the arrival/admission time for open-loop (fleet) jobs.
+        """
+        sim = self.sim
+        hp = sim.hostproto
         for h in parts:
             hp.hosts[h].send_cursor.append([app, 0])
-            hp.schedule_pump(h, 0.0)
+            hp.schedule_pump(h, sim.now)
 
     # ---- host send generation ---------------------------------------------
     def next_host_packet(self, host: int) -> Optional[Packet]:
@@ -158,7 +167,11 @@ class AggregationStrategy:
         for cur in hs.send_cursor:
             app, nxt = cur
             B = sim.blocks[app]
-            if self.leader_skips_self:
+            # admission-degraded apps ride the §3.3 host-based path whatever
+            # the strategy: bypass packets straight to the leader, which
+            # keeps its own contribution local and unicasts the result
+            degraded = app in sim.bypass_apps
+            if self.leader_skips_self or degraded:
                 while nxt < B and sim.leader_of(app, nxt) == host:
                     nxt += 1  # the leader keeps its contribution local (§3.1.4)
             if nxt < B:
@@ -170,10 +183,10 @@ class AggregationStrategy:
                              dest=sim.leader_of(app, nxt), id=pid, counter=1,
                              hosts=len(sim.leaders[app]),
                              value=sim.contribution_of(app, nxt, host),
-                             size_bytes=size, src=host)
+                             bypass=degraded, size_bytes=size, src=host)
                 if sim.trace is not None:
                     sim.trace.on_host_send(host, pkt)
-                if self.uses_retx_timers:
+                if self.uses_retx_timers or degraded:
                     # loss detection is part of the Canary protocol (§3.3);
                     # static-tree systems restart from scratch instead.
                     sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX,
@@ -204,6 +217,7 @@ class CanaryStrategy(AggregationStrategy):
 
     leader_skips_self = True
     uses_retx_timers = True
+    uses_switch_memory = True
 
     # ---- descriptor slot hashing -------------------------------------------
     @staticmethod
@@ -216,10 +230,20 @@ class CanaryStrategy(AggregationStrategy):
     def slot_of(self, pid: int) -> int:
         sim = self.sim
         cfg = sim.cfg
+        region = sim.slot_regions.get(id_app(pid))
+        if region is not None:
+            # enforced tenant quota (fleet admission, §3.2.2): this app's
+            # descriptors can only ever occupy its tenant's slot region, so
+            # a tenant's per-switch footprint is hard-bounded by its quota —
+            # overflow within the region collides and bypasses (§3.2.1)
+            # instead of stealing another tenant's slots.
+            offset, size = region
+            return offset + self._hash64(pid) % size
         if cfg.partition_table and len(sim.jobs) > 1:
             apps = len(sim.jobs)
-            region = max(1, cfg.table_size // apps)
-            return (id_app(pid) % apps) * region + self._hash64(pid) % region
+            region_sz = max(1, cfg.table_size // apps)
+            return (id_app(pid) % apps) * region_sz \
+                + self._hash64(pid) % region_sz
         return self._hash64(pid) % cfg.table_size
 
     # ---- dataplane ----------------------------------------------------------
@@ -326,6 +350,8 @@ class StaticTreeStrategy(AggregationStrategy):
     :meth:`~.topology.Topology.static_expected`, so the same strategy runs on
     any registered topology."""
 
+    uses_switch_memory = True
+
     def __init__(self, sim):
         super().__init__(sim)
         self.roots: Dict[int, List[int]] = {}          # app -> tree roots
@@ -348,6 +374,11 @@ class StaticTreeStrategy(AggregationStrategy):
 
     def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
         sim = self.sim
+        if pkt.bypass:
+            # admission-degraded app (host-based fallback): never part of the
+            # static plan — forward straight toward the leader host
+            sim.net.forward_toward_host(sim, sw, pkt)
+            return
         sl = sim.switch
         app = id_app(pkt.id)
         root = self.root_of(app, id_block(pkt.id))

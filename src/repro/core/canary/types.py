@@ -308,6 +308,13 @@ class AllreduceJob:
                       packets toward the source (recording the dynamic tree)
                       and the source's data rides the broadcast phase down.
     * ``barrier``   — a 0-byte allreduce (header-only packets).
+
+    ``arrival_ns`` makes the submit time a first-class engine event
+    (``EV_JOB_ARRIVE``): the job's protocol state is set up — and its hosts
+    start sending — only when the event fires, so fleets of tenants can
+    submit jobs open-loop over the lifetime of one run. ``tenant`` groups
+    apps under one owner for switch-memory quota accounting
+    (``repro.core.fleet``); it defaults to the app id.
     """
 
     app: int
@@ -315,11 +322,28 @@ class AllreduceJob:
     data_bytes: int
     collective: str = "allreduce"
     root: Optional[int] = None     # reduce destination / broadcast source
+    arrival_ns: float = 0.0        # submit time (0 = present at t=0, as before)
+    tenant: int = -1               # owning tenant (< 0: the app is its own tenant)
 
     def num_blocks(self, payload_bytes: int) -> int:
         if self.collective == "barrier":
             return 1
         return max(1, -(-self.data_bytes // payload_bytes))
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """A fleet tenant: identity plus its share of the descriptor table.
+
+    ``weight`` drives the weighted quota policies (``repro.core.fleet.quota``):
+    a tenant's slot region is ``table_size * weight / sum(weights)``, so a
+    priority tenant can claim more of the table (§3.2.2 — descriptor memory
+    is the scarce resource bounding concurrent in-network tenants).
+    """
+
+    tenant: int
+    weight: float = 1.0
+    name: str = ""
 
 
 @dataclass
@@ -344,9 +368,27 @@ class SimResult:
     events: int
     dropped_packets: int
     completed_blocks: int
+    # -- per-job lifecycle (fleet subsystem) ---------------------------------
+    # Additive diagnostics: the golden-replay contract pins only the fields
+    # above (tests/core/golden_cases.py GOLDEN_FIELDS).
+    job_submit_ns: Dict[int, float] = field(default_factory=dict)
+    job_start_ns: Dict[int, float] = field(default_factory=dict)   # admitted/degraded (not deferred)
+    job_finish_ns: Dict[int, float] = field(default_factory=dict)
+    job_admitted: Dict[int, bool] = field(default_factory=dict)    # False: host-based fallback
+    app_fallback_blocks: Dict[int, int] = field(default_factory=dict)
+    tenant_of: Dict[int, int] = field(default_factory=dict)
+
+    def jct_ns(self, app: int) -> float:
+        """Job completion time: finish minus submit (includes deferral wait)."""
+        return self.job_finish_ns[app] - self.job_submit_ns[app]
 
     def summary(self) -> str:
         gp = ", ".join(f"app{a}={g:.1f}Gbps" for a, g in sorted(self.goodput_gbps.items()))
+        apps = " ".join(
+            f"app{a}[done={self.job_finish_ns.get(a, float('nan'))/1e3:.1f}us "
+            f"fb={self.app_fallback_blocks.get(a, 0)}]"
+            for a in sorted(self.goodput_gbps))
         return (f"t={self.duration_ns/1e3:.1f}us {gp} correct={self.correct} "
                 f"stragglers={self.stragglers} collisions={self.collisions} "
-                f"retx={self.retransmissions} maxdesc={self.max_descriptors_per_switch}")
+                f"retx={self.retransmissions} maxdesc={self.max_descriptors_per_switch} "
+                f"{apps}")

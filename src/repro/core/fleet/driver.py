@@ -1,0 +1,154 @@
+"""Fleet driver: one multi-tenant, open-loop simulation end to end.
+
+Glues the fleet pieces onto the ``Simulator`` facade:
+
+1. a :class:`FleetScenario` (topology config + tenants + arrival-timed jobs
+   + quota policy),
+2. an :class:`~repro.core.fleet.quota.AdmissionController` built from it,
+3. one ``Simulator`` run with open-loop ``EV_JOB_ARRIVE`` activations,
+4. optional per-job *uncontended* baseline runs (the same job alone on an
+   idle fabric, no quotas) to turn JCTs into slowdowns,
+5. a :class:`FleetResult` with per-job records, per-tenant aggregates and
+   Jain's fairness index.
+
+Baselines are cached by job shape — a training tenant re-running the same
+placement every iteration costs one baseline simulation, not one per job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..canary.simulator import Simulator
+from ..canary.types import (Algo, AllreduceJob, SimConfig, SimResult,
+                            TenantSpec)
+from .metrics import (JobRecord, job_records, per_tenant_means,
+                      tenant_fairness)
+from .quota import AdmissionController
+
+
+@dataclass
+class FleetScenario:
+    """Everything one fleet run needs. ``jobs`` carry their own
+    ``arrival_ns``/``tenant``; every job's tenant must appear in ``tenants``
+    unless the quota policy is ``"none"``."""
+
+    cfg: SimConfig
+    tenants: List[TenantSpec]
+    jobs: List[AllreduceJob]
+    algo: Algo = Algo.CANARY
+    n_trees: int = 1
+    noise_hosts: Optional[List[int]] = None
+    quota_policy: str = "weighted"     # none | equal | weighted
+    overflow: str = "degrade"          # degrade | defer
+    baselines: bool = True             # run uncontended JCTs for slowdown
+    demand_slots: Optional[int] = None  # override the Little's-law demand
+
+
+@dataclass
+class FleetResult:
+    """Outputs of one fleet run."""
+
+    sim: SimResult
+    jobs: List[JobRecord]
+    admission: AdmissionController
+    mean_jct_ns: float
+    max_jct_ns: float
+    mean_slowdown: Optional[float]     # None when baselines were off
+    jain_fairness: float               # across tenants (see metrics.py)
+    degraded_jobs: int
+    deferred_jobs: int
+    per_tenant: Dict[int, dict] = field(default_factory=dict)
+
+    @property
+    def correct(self) -> bool:
+        return self.sim.correct
+
+    def summary(self) -> str:
+        sd = f"{self.mean_slowdown:.2f}" if self.mean_slowdown is not None \
+            else "n/a"
+        return (f"jobs={len(self.jobs)} correct={self.correct} "
+                f"mean_jct={self.mean_jct_ns/1e3:.1f}us slowdown={sd} "
+                f"jain={self.jain_fairness:.3f} degraded={self.degraded_jobs} "
+                f"deferred={self.deferred_jobs}")
+
+
+class FleetDriver:
+    """Build and run one :class:`FleetScenario`."""
+
+    def __init__(self, scenario: FleetScenario):
+        self.scenario = scenario
+        self._baseline_cache: Dict[Tuple, float] = {}
+
+    # ----------------------------------------------------------- construction
+    def make_admission(self) -> AdmissionController:
+        s = self.scenario
+        return AdmissionController(s.tenants, policy=s.quota_policy,
+                                   overflow=s.overflow, demand=s.demand_slots)
+
+    def build_simulator(self) -> Simulator:
+        s = self.scenario
+        return Simulator(s.cfg, s.jobs, algo=s.algo, n_trees=s.n_trees,
+                         noise_hosts=s.noise_hosts,
+                         admission=self.make_admission())
+
+    # ------------------------------------------------------------- baselines
+    def _baseline_jct(self, job: AllreduceJob) -> float:
+        """Uncontended JCT of ``job``: same fabric/algo, alone, at t=0, no
+        quotas, no background noise."""
+        s = self.scenario
+        key = (tuple(sorted(job.participants)), job.data_bytes,
+               job.collective, job.root)
+        cached = self._baseline_cache.get(key)
+        if cached is not None:
+            return cached
+        solo = dataclasses.replace(job, arrival_ns=0.0, tenant=-1)
+        sim = Simulator(s.cfg, [solo], algo=s.algo, n_trees=s.n_trees)
+        jct = sim.run().duration_ns
+        self._baseline_cache[key] = jct
+        return jct
+
+    # -------------------------------------------------------------------- run
+    def run(self) -> FleetResult:
+        s = self.scenario
+        sim = self.build_simulator()
+        result = sim.run()
+        baselines = None
+        if s.baselines:
+            baselines = {j.app: self._baseline_jct(j) for j in s.jobs
+                         if len(j.participants) > 1}
+        records = job_records(result, baselines)
+        admission = sim.admission
+        jcts = [r.jct_ns for r in records if r.jct_ns == r.jct_ns]
+        slowdowns = [r.slowdown for r in records if r.slowdown is not None]
+        mean_jct_by_tenant = per_tenant_means(records, "jct_ns")
+        mean_sd_by_tenant = per_tenant_means(records, "slowdown")
+        per_tenant: Dict[int, dict] = {}
+        for t in sorted({r.tenant for r in records}):
+            trs = [r for r in records if r.tenant == t]
+            per_tenant[t] = {
+                "jobs": len(trs),
+                "mean_jct_ns": mean_jct_by_tenant.get(t, float("nan")),
+                "mean_slowdown": mean_sd_by_tenant.get(t),
+                "degraded_jobs": sum(1 for r in trs if not r.admitted),
+                "fallback_blocks": sum(r.fallback_blocks for r in trs),
+            }
+        return FleetResult(
+            sim=result,
+            jobs=records,
+            admission=admission,
+            mean_jct_ns=statistics.mean(jcts) if jcts else float("nan"),
+            max_jct_ns=max(jcts) if jcts else float("nan"),
+            mean_slowdown=statistics.mean(slowdowns) if slowdowns else None,
+            jain_fairness=tenant_fairness(records),
+            degraded_jobs=sum(1 for r in records if not r.admitted),
+            deferred_jobs=len(admission.deferrals) if admission else 0,
+            per_tenant=per_tenant,
+        )
+
+
+def run_fleet(scenario: FleetScenario) -> FleetResult:
+    """One-call convenience wrapper."""
+    return FleetDriver(scenario).run()

@@ -112,9 +112,22 @@ def build_simulator(name: str) -> Simulator:
                      n_trees=n_trees, noise_hosts=noise)
 
 
+# The behavioural contract the goldens pin. PR 3 added per-job lifecycle
+# diagnostics to SimResult (job_submit/start/finish, admission flags,
+# fallback counts); those are additive observability, so the golden schema
+# stays the original field set and the comparison remains bit-for-bit on it.
+GOLDEN_FIELDS = (
+    "duration_ns", "start_ns", "goodput_gbps", "correct", "link_utilization",
+    "avg_utilization", "stragglers", "collisions", "restorations",
+    "retransmissions", "fallbacks", "max_descriptors_per_switch",
+    "max_descriptor_bytes", "events", "dropped_packets", "completed_blocks",
+)
+
+
 def result_to_jsonable(result) -> dict:
     """SimResult -> JSON-stable dict (int dict keys become strings)."""
-    d = dataclasses.asdict(result)
+    full = dataclasses.asdict(result)
+    d = {k: full[k] for k in GOLDEN_FIELDS}
     d["goodput_gbps"] = {str(k): v for k, v in d["goodput_gbps"].items()}
     # round-trip through the JSON encoder so in-memory results compare equal
     # to goldens loaded from disk (float repr round-trips exactly)

@@ -1,0 +1,68 @@
+"""Open-loop arrival generators: determinism, ordering, validation."""
+import random
+
+import pytest
+
+from repro.core.canary import TenantSpec
+from repro.core.fleet import (bursty_arrivals, make_jobs, periodic_arrivals,
+                              poisson_arrivals, trace_arrivals)
+
+
+def test_poisson_deterministic_and_sorted():
+    a = poisson_arrivals(50, 1000.0, rng=random.Random(7))
+    b = poisson_arrivals(50, 1000.0, rng=random.Random(7))
+    assert a == b
+    assert a == sorted(a)
+    assert len(a) == 50
+    assert all(t > 0 for t in a)
+    # mean interarrival roughly matches (memoryless process, 50 samples)
+    mean = a[-1] / 50
+    assert 500.0 < mean < 2000.0
+
+
+def test_poisson_validates_inputs():
+    with pytest.raises(ValueError):
+        poisson_arrivals(3, 0.0, rng=random.Random(0))
+
+
+def test_periodic_training_iterations():
+    a = periodic_arrivals(4, 5000.0, start_ns=1000.0)
+    assert a == [1000.0, 6000.0, 11000.0, 16000.0]
+    j = periodic_arrivals(4, 5000.0, jitter_ns=100.0, rng=random.Random(3))
+    assert j == sorted(j)
+    base = [0.0, 5000.0, 10000.0, 15000.0]
+    assert all(0.0 <= x - b < 100.0 for x, b in zip(j, base))
+    with pytest.raises(ValueError):
+        periodic_arrivals(2, 1000.0, jitter_ns=10.0)  # jitter needs an rng
+
+
+def test_bursty_arrivals_shape():
+    a = bursty_arrivals(3, 4, 10_000.0, intra_burst_ns=10.0)
+    assert len(a) == 12
+    assert a[0] == 0.0 and a[3] == 30.0
+    assert a[4] == 10_000.0
+
+
+def test_trace_arrivals_sorts_and_validates():
+    assert trace_arrivals([30.0, 10.0, 20.0]) == [10.0, 20.0, 30.0]
+    with pytest.raises(ValueError):
+        trace_arrivals([-1.0, 5.0])
+
+
+def test_make_jobs_fixed_vs_resampled_placement():
+    tenant = TenantSpec(3, weight=2.0)
+    arr = [100.0, 200.0, 300.0]
+    fixed = make_jobs(tenant, arr, range(32), 8, 4096,
+                      rng=random.Random(1), app_base=10)
+    assert [j.app for j in fixed] == [10, 11, 12]
+    assert [j.arrival_ns for j in fixed] == arr
+    assert all(j.tenant == 3 for j in fixed)
+    # training tenant: identical placement every iteration
+    assert len({tuple(j.participants) for j in fixed}) == 1
+    moved = make_jobs(tenant, arr, range(32), 8, 4096,
+                      rng=random.Random(1), app_base=0,
+                      fixed_placement=False)
+    assert len({tuple(j.participants) for j in moved}) > 1
+    with pytest.raises(ValueError):
+        make_jobs(tenant, arr, range(4), 8, 4096, rng=random.Random(0),
+                  app_base=0)

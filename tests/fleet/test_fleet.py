@@ -1,0 +1,253 @@
+"""Fleet subsystem behaviour: open-loop arrivals, enforced quotas, QoS.
+
+The acceptance scenario from the issue lives here: ≥ 8 tenants arriving over
+time under descriptor quotas, every admitted job's allreduce exact, a
+constrained tenant measurably degraded while a priority tenant is not.
+"""
+import random
+
+import pytest
+
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               TenantSpec, three_tier_config)
+from repro.core.fleet import (AdmissionController, FleetDriver, FleetScenario,
+                              demand_slots, jain_index, make_jobs,
+                              poisson_arrivals, run_fleet)
+
+
+def tiny_cfg(**kw):
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4,
+                table_size=4096, seed=11, max_events=20_000_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# --------------------------------------------------------------- arrivals
+def test_open_loop_arrival_matches_t0_jct():
+    """A job arriving mid-run on an idle fabric costs the same JCT as the
+    identical job at t=0 (the clock shifts; the protocol does not)."""
+    cfg = tiny_cfg()
+    r0 = Simulator(cfg, [AllreduceJob(0, list(range(8)), 32768)]).run()
+    rl = Simulator(cfg, [AllreduceJob(0, list(range(8)), 32768,
+                                      arrival_ns=50_000.0)]).run()
+    assert r0.correct and rl.correct
+    assert rl.job_submit_ns[0] == 50_000.0
+    assert rl.job_start_ns[0] == 50_000.0
+    assert rl.job_finish_ns[0] > 50_000.0
+    assert rl.jct_ns(0) == pytest.approx(r0.jct_ns(0), rel=1e-6)
+
+
+def test_staggered_arrivals_all_complete_exactly():
+    cfg = tiny_cfg()
+    jobs = [AllreduceJob(a, list(range(a * 4, a * 4 + 4)), 16384,
+                         arrival_ns=a * 3000.0, tenant=a)
+            for a in range(4)]
+    r = Simulator(cfg, jobs).run()
+    assert r.correct
+    for a in range(4):
+        assert r.job_finish_ns[a] >= r.job_submit_ns[a] == a * 3000.0
+    # duration spans to the last arrival's completion
+    assert r.duration_ns >= 9000.0
+
+
+# ----------------------------------------------------------------- quotas
+def test_quota_region_is_physically_enforced():
+    """An admitted tenant's descriptors are confined to its slot region:
+    the per-switch high-water can never exceed the quota, however much the
+    tenant offers (overflow collides + bypasses instead)."""
+    cfg = tiny_cfg(table_size=64)
+    jobs = [AllreduceJob(0, list(range(8)), 65536, tenant=0),
+            AllreduceJob(1, list(range(8, 16)), 65536, tenant=0)]
+    # without quotas the two 64-block jobs overrun 32 descriptors per switch
+    free = Simulator(cfg, [AllreduceJob(**{**j.__dict__}) for j in jobs]).run()
+    assert free.correct
+    assert free.max_descriptors_per_switch > 32
+    # equal split over two tenants -> tenant 0 owns a 32-slot region
+    adm = AdmissionController([TenantSpec(0), TenantSpec(1)], policy="equal",
+                              demand=8)
+    quota = Simulator(cfg, jobs, admission=adm).run()
+    assert quota.correct
+    assert quota.max_descriptors_per_switch <= 32
+    assert quota.job_admitted == {0: True, 1: True}
+
+
+def test_constrained_tenant_degrades_priority_does_not():
+    """Weighted sharing: a tenant whose region is below one job's demand is
+    degraded to the §3.3 host-based path; the priority tenant never is."""
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0, weight=8.0, name="prio"),
+               TenantSpec(1, weight=0.01, name="constrained")]
+    jobs = [AllreduceJob(0, list(range(8)), 16384, tenant=0),
+            AllreduceJob(1, list(range(8, 16)), 16384, tenant=1)]
+    adm = AdmissionController(tenants, policy="weighted")
+    assert adm  # demand derived from the occupancy model at attach()
+    r = Simulator(cfg, jobs, admission=adm).run()
+    assert r.correct  # degraded jobs still reduce exactly
+    assert r.job_admitted[0] is True
+    assert r.job_admitted[1] is False
+    assert r.app_fallback_blocks.get(0, 0) == 0
+    assert r.app_fallback_blocks[1] == 16  # every block rode the host path
+    assert adm.caps[1] == 0 and adm.caps[0] >= 1
+
+
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE])
+def test_degraded_job_exact_under_both_in_network_algos(algo):
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0, weight=1.0), TenantSpec(1, weight=0.001)]
+    jobs = [AllreduceJob(0, list(range(6)), 8192, tenant=0),
+            AllreduceJob(1, [8, 9, 10, 11, 12], 8192, tenant=1)]
+    adm = AdmissionController(tenants, policy="weighted")
+    r = Simulator(cfg, jobs, algo=algo, admission=adm).run()
+    assert r.correct
+    assert not r.job_admitted[1]
+    assert r.app_fallback_blocks[1] == 8
+
+
+def test_degraded_fallback_count_capped_under_loss():
+    """Regression: a degraded app whose blocks *also* exhaust
+    max_generations must not double-count — fallback blocks never exceed
+    the job's block count."""
+    cfg = tiny_cfg(drop_prob=0.1, max_generations=2, retx_timeout_ns=3e4,
+                   seed=9)
+    tenants = [TenantSpec(0, weight=1.0), TenantSpec(1, weight=0.001)]
+    jobs = [AllreduceJob(0, list(range(6)), 8192, tenant=0),
+            AllreduceJob(1, [8, 9, 10, 11, 12], 8192, tenant=1)]
+    adm = AdmissionController(tenants, policy="weighted")
+    r = Simulator(cfg, jobs, admission=adm).run()
+    assert r.correct
+    assert not r.job_admitted[1]
+    assert r.app_fallback_blocks[1] == 8  # == the job's block count, exactly
+    assert r.app_fallback_blocks.get(0, 0) <= 8
+
+
+def test_ring_is_never_degraded():
+    """Host-based strategies consume no switch memory: always admitted."""
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0, weight=0.001), TenantSpec(1, weight=1.0)]
+    jobs = [AllreduceJob(0, list(range(6)), 8192, tenant=0)]
+    adm = AdmissionController(tenants, policy="weighted")
+    r = Simulator(cfg, jobs, algo=Algo.RING, admission=adm).run()
+    assert r.correct and r.job_admitted[0] is True
+    assert not r.app_fallback_blocks
+
+
+def test_defer_overflow_queues_until_capacity_frees():
+    """overflow='defer': the second job of a capacity-1 tenant waits for the
+    first to finish instead of degrading."""
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0)]
+    jobs = [AllreduceJob(0, list(range(8)), 16384, tenant=0),
+            AllreduceJob(1, list(range(8, 16)), 16384, tenant=0,
+                         arrival_ns=100.0)]
+    adm = AdmissionController(tenants, policy="weighted", overflow="defer",
+                              demand=cfg.table_size)  # cap = 1
+    r = Simulator(cfg, jobs, admission=adm).run()
+    assert r.correct
+    assert r.job_admitted == {0: True, 1: True}  # both ran in-network
+    assert adm.deferrals == {1: 1}
+    # queueing delay: job 1 started only when job 0 finished
+    assert r.job_start_ns[1] == r.job_finish_ns[0]
+    assert r.job_start_ns[1] > r.job_submit_ns[1]
+    assert r.jct_ns(1) > r.jct_ns(0)
+
+
+def test_unknown_tenant_rejected_and_bad_policy():
+    with pytest.raises(ValueError):
+        AdmissionController([TenantSpec(0)], policy="bogus")
+    with pytest.raises(ValueError):
+        AdmissionController([TenantSpec(0)], overflow="bogus")
+    with pytest.raises(ValueError):
+        AdmissionController([TenantSpec(0), TenantSpec(0)])
+    adm = AdmissionController([TenantSpec(0)], policy="weighted")
+    cfg = tiny_cfg()
+    with pytest.raises(ValueError):
+        Simulator(cfg, [AllreduceJob(5, [0, 1], 1024, tenant=5)],
+                  admission=adm).run()
+
+
+def test_demand_slots_tracks_occupancy_model():
+    cfg = tiny_cfg()
+    d = demand_slots(cfg)
+    assert d >= 1
+    # doubling the aggregation timeout lengthens descriptor lifetime and
+    # therefore the per-job demand (Little's law)
+    assert demand_slots(tiny_cfg(timeout_ns=4000.0)) > d
+
+
+# ------------------------------------------------------------- acceptance
+def test_acceptance_eight_tenant_fleet_under_quotas():
+    """≥ 8 tenants arriving over time under enforced descriptor quotas:
+    every job completes exactly, the constrained tenant is measurably
+    degraded, the priority tenant is untouched, and the QoS metrics are
+    well-formed."""
+    cfg = tiny_cfg(seed=5)
+    rng = random.Random(42)
+    # tenant 0 is priority (big weight); tenant 7 is constrained to below
+    # one job's slot demand; the middle tenants share modest quotas
+    tenants = [TenantSpec(0, weight=6.0, name="priority")] + \
+        [TenantSpec(t, weight=1.0) for t in range(1, 7)] + \
+        [TenantSpec(7, weight=0.02, name="constrained")]
+    jobs = []
+    for t in tenants:
+        arr = poisson_arrivals(2, 15_000.0, rng=rng)
+        pool = range(cfg.num_hosts)
+        jobs += make_jobs(t, arr, pool, 5, 16384, rng=rng,
+                          app_base=t.tenant * 10)
+    assert len(tenants) == 8 and len(jobs) == 16
+    scenario = FleetScenario(cfg=cfg, tenants=tenants, jobs=jobs,
+                             algo=Algo.CANARY, quota_policy="weighted")
+    fr = FleetDriver(scenario).run()
+    # correctness: every job's allreduce is exact (SimResult.correct checks
+    # every participant got the true sum for every block)
+    assert fr.correct
+    assert len(fr.jobs) == 16
+    for rec in fr.jobs:
+        assert rec.finish_ns >= rec.submit_ns
+        assert rec.jct_ns > 0
+        assert rec.slowdown is not None and rec.slowdown > 0
+    # quota enforcement visible in the metrics
+    constrained = fr.per_tenant[7]
+    priority = fr.per_tenant[0]
+    assert constrained["degraded_jobs"] == 2
+    assert constrained["fallback_blocks"] > 0
+    assert priority["degraded_jobs"] == 0
+    assert priority["fallback_blocks"] == 0
+    # fairness index over 8 tenants is in (1/8, 1]
+    assert 0.125 < fr.jain_fairness <= 1.0
+    assert fr.degraded_jobs == 2
+
+
+def test_fleet_on_three_tier_topology():
+    cfg = three_tier_config(seed=3)
+    tenants = [TenantSpec(0, weight=4.0), TenantSpec(1, weight=1.0)]
+    rng = random.Random(9)
+    jobs = make_jobs(tenants[0], [0.0, 5000.0], range(16), 6, 16384,
+                     rng=rng, app_base=0) + \
+        make_jobs(tenants[1], [2000.0], range(16, 32), 6, 16384,
+                  rng=rng, app_base=10)
+    fr = run_fleet(FleetScenario(cfg=cfg, tenants=tenants, jobs=jobs,
+                                 quota_policy="weighted"))
+    assert fr.correct
+    assert all(r.finish_ns >= r.submit_ns for r in fr.jobs)
+
+
+# ---------------------------------------------------------------- metrics
+def test_jain_index_bounds():
+    assert jain_index([]) == 1.0
+    assert jain_index([3.0, 3.0, 3.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+    v = jain_index([1.0, 2.0, 3.0])
+    assert 1 / 3 < v < 1.0
+
+
+def test_summary_includes_per_app_completion_and_fallbacks():
+    """Pins the extended one-line summary format (per-app completion time +
+    fallback counts) so multi-job runs are diagnosable at a glance."""
+    cfg = tiny_cfg()
+    jobs = [AllreduceJob(0, [0, 1, 2, 3], 8192),
+            AllreduceJob(1, [4, 5, 6, 7], 8192)]
+    r = Simulator(cfg, jobs).run()
+    s = r.summary()
+    assert f"app0[done={r.job_finish_ns[0]/1e3:.1f}us fb=0]" in s
+    assert f"app1[done={r.job_finish_ns[1]/1e3:.1f}us fb=0]" in s
+    assert "correct=True" in s
