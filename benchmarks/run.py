@@ -20,7 +20,7 @@ def main() -> None:
     from . import (collective_bench, common, fig2_overview, fig6_single_switch,
                    fig7_static_vs_canary, fig8_congestion_intensity,
                    fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,
-                   fleet, mem_model, roofline, sweep, trace_replay)
+                   fleet, mem_model, roofline, sweep, trace_replay, workload)
     suites = {
         "fig2": fig2_overview.main,
         "fig6": fig6_single_switch.main,
@@ -34,6 +34,7 @@ def main() -> None:
         "roofline": roofline.main,
         "trace": trace_replay.main,
         "fleet": fleet.main,
+        "workload": workload.main,
         "sweep": lambda: sweep.main(["--suite", "fig7", "--reps", "1",
                                      "--out", os.environ.get(
                                          "SWEEP_JSON", "sweep_fig7.json")]),

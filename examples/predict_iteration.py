@@ -1,0 +1,60 @@
+"""Predict a model's training-iteration time under each allreduce algorithm.
+
+Picks a named workload scenario (a registered model config + fabric +
+batch geometry), compiles its gradients into DDP-style buckets, replays the
+staggered bucket traffic through the packet-level simulator once per
+algorithm, and prints predicted iteration time, the exposed-communication
+fraction, and the speedup over the host-based ring baseline — the question
+the workload subsystem exists to answer: "how much faster does this *model*
+train under Canary?"
+
+    PYTHONPATH=src python examples/predict_iteration.py
+    PYTHONPATH=src python examples/predict_iteration.py whisper/three_tier
+
+Pass ``--congested`` (default) or ``--idle`` to toggle background traffic;
+any registered scenario name works (see ``list_scenarios()``).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.canary import Algo
+from repro.core.workload import get_scenario, list_scenarios, predict_scenario
+
+
+def main(argv) -> None:
+    args = [a for a in argv if not a.startswith("--")]
+    name = args[0] if args else "deepseek-moe/fat_tree"
+    congestion = "--idle" not in argv
+    s = get_scenario(name)
+    print(f"scenario {name}: {s.arch} ({s.variant}) on {s.topology}, "
+          f"dp={s.dp_hosts} seq={s.seq} batch={s.global_batch} "
+          f"buckets<=~{s.bucket_bytes >> 10}KiB "
+          f"congestion={'on' if congestion else 'off'}")
+    if s.description:
+        print(f"  ({s.description})")
+    print()
+    preds = {}
+    for algo, nt, label in ((Algo.RING, 1, "ring"),
+                            (Algo.STATIC_TREE, 1, "static1"),
+                            (Algo.CANARY, 1, "canary")):
+        preds[label] = predict_scenario(name, algo=algo, n_trees=nt,
+                                        congestion=congestion)
+    base = preds["ring"].iteration_ns
+    print(f"{'algo':>8} {'iter_us':>9} {'compute_us':>11} {'exposed':>8} "
+          f"{'buckets':>7} {'vs_ring':>8} {'exact':>6}")
+    for label, p in preds.items():
+        print(f"{label:>8} {p.iteration_ns / 1e3:>9.1f} "
+              f"{p.compute_ns / 1e3:>11.1f} {p.exposed_comm_frac:>8.1%} "
+              f"{len(p.buckets):>7} {base / p.iteration_ns:>8.2f}x "
+              f"{str(p.correct):>6}")
+    print(f"\ndp gradient bytes/iteration: "
+          f"{preds['canary'].plan.total_grad_bytes} "
+          f"(expert-sharded: {preds['canary'].plan.expert_grad_bytes})")
+    print(f"known scenarios: {', '.join(list_scenarios())}")
+    if not all(p.correct for p in preds.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -3,6 +3,7 @@ no XLA_FLAGS mutation; see repro.launch.dryrun for the driver)."""
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Dict
 
 from repro.models.config import ModelConfig
@@ -21,6 +22,9 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# dtypes we have already warned about (warn once per process, not per line)
+_WARNED_DTYPES: set = set()
+
 
 def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Sum result-shape bytes of every collective op in the optimized HLO.
@@ -29,9 +33,16 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
     ring equivalents); the others move ~1x their result. The returned
     ``total_link_bytes`` applies those multipliers — the §Roofline collective
     term divides it by the per-link bandwidth.
+
+    A dtype missing from ``_DTYPE_BYTES`` is assumed 4 bytes wide; rather
+    than doing that silently, every occurrence is tallied in the returned
+    ``unknown_dtypes`` field (dtype -> op count) and a ``RuntimeWarning`` is
+    emitted once per dtype per process, so a new XLA dtype cannot skew the
+    roofline unnoticed.
     """
     out = {k: 0.0 for k in _COLLECTIVES}
     count = {k: 0 for k in _COLLECTIVES}
+    unknown: Dict[str, int] = {}
     # e.g.:  %all-reduce.1 = bf16[1024,512]{1,0} all-reduce(...)
     shape_re = re.compile(
         r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z\-]+)")
@@ -47,16 +58,26 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
         if not m:
             continue
         dtype, dims, _ = m.groups()
-        size = _DTYPE_BYTES.get(dtype, 4)
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            size = 4
+            unknown[dtype] = unknown.get(dtype, 0) + 1
         for d in dims.split(","):
             if d:
                 size *= int(d)
         out[hit] += size
         count[hit] += 1
+    for dtype in unknown:
+        if dtype not in _WARNED_DTYPES:
+            _WARNED_DTYPES.add(dtype)
+            warnings.warn(
+                f"parse_collective_bytes: unknown HLO dtype {dtype!r} — "
+                "assuming 4 bytes/element; add it to _DTYPE_BYTES",
+                RuntimeWarning, stacklevel=2)
     total = sum(v * (2.0 if k == "all-reduce" else 1.0)
                 for k, v in out.items())
     return {"per_op_bytes": out, "per_op_count": count,
-            "total_link_bytes": total}
+            "total_link_bytes": total, "unknown_dtypes": unknown}
 
 
 def model_flops_per_step(cfg: ModelConfig, kind: str, seq: int,

@@ -1,12 +1,34 @@
-from ..compat import patch_jax as _patch_jax
+"""Model zoo package.
 
-_patch_jax()
-
+``ModelConfig`` / ``get_config`` / ``list_archs`` are pure-Python (config
+dataclasses + registry) and import eagerly. The jax-backed model functions
+(``forward``, ``init_params``, ...) load lazily on first attribute access
+(PEP 562) so that config-only consumers — notably the simulator-side
+workload compiler (``repro.core.workload``), which turns ``ModelConfig``s
+into gradient traffic — never pull jax into the process. The
+``repro.compat`` jax shims install right before the first lazy load (and at
+``repro.models.transformer`` import, for direct imports), preserving the
+patch-before-use ordering the eager ``__init__`` used to provide.
+"""
 from .config import ModelConfig
 from .registry import get_config, list_archs
-from .transformer import (decode_step, forward, init_cache, init_params,
-                          layer_period, prepare_cross_cache)
+
+_LAZY_TRANSFORMER = ("decode_step", "forward", "init_cache", "init_params",
+                     "layer_period", "prepare_cross_cache")
 
 __all__ = ["ModelConfig", "decode_step", "forward", "get_config",
            "init_cache", "init_params", "layer_period", "list_archs",
            "prepare_cross_cache"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY_TRANSFORMER:
+        from ..compat import patch_jax
+        patch_jax()
+        from . import transformer
+        return getattr(transformer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

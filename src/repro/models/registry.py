@@ -1,17 +1,24 @@
-"""Architecture registry: name -> ModelConfig (full / smoke)."""
+"""Architecture registry: name -> ModelConfig (full / smoke).
+
+``repro.configs`` modules import ``repro.models.config`` (which triggers
+this package's ``__init__``), so the configs import lives inside the
+functions — importing ``repro.configs`` first must not deadlock on a
+partially initialized module.
+"""
 from __future__ import annotations
 
 from typing import List
 
-from repro.configs import ARCH_MODULES, ARCH_NAMES
 from .config import ModelConfig
 
 
 def list_archs() -> List[str]:
+    from repro.configs import ARCH_NAMES
     return list(ARCH_NAMES)
 
 
 def get_config(name: str, variant: str = "full") -> ModelConfig:
+    from repro.configs import ARCH_MODULES, ARCH_NAMES
     key = name.lower()
     if key not in ARCH_MODULES:
         raise KeyError(f"unknown arch '{name}'; known: {ARCH_NAMES}")

@@ -39,6 +39,31 @@ def test_parse_ignores_non_collectives():
     assert r["total_link_bytes"] == 0
 
 
+def test_parse_known_dtypes_report_no_unknowns():
+    assert parse_collective_bytes(HLO_SAMPLE)["unknown_dtypes"] == {}
+
+
+def test_parse_unknown_dtype_warns_once_and_is_surfaced():
+    """An HLO dtype we have no byte width for must not be silently assumed
+    4 B: it is tallied in ``unknown_dtypes`` and warned about once."""
+    import warnings
+
+    from repro.launch import analysis
+
+    hlo = "  %ar = f4e2m1fn[64]{0} all-reduce(f4e2m1fn[64]{0} %x)\n" * 3
+    analysis._WARNED_DTYPES.discard("f4e2m1fn")  # isolate from other tests
+    with pytest.warns(RuntimeWarning, match="f4e2m1fn"):
+        r = parse_collective_bytes(hlo)
+    assert r["unknown_dtypes"] == {"f4e2m1fn": 3}
+    assert r["per_op_bytes"]["all-reduce"] == 3 * 64 * 4  # 4 B fallback
+    assert r["per_op_count"]["all-reduce"] == 3
+    # warn-once: a second parse of the same dtype stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        r2 = parse_collective_bytes(hlo)
+    assert r2["unknown_dtypes"] == {"f4e2m1fn": 3}
+
+
 def test_input_shapes_match_assignment():
     assert INPUT_SHAPES["train_4k"] == dict(kind="train", seq_len=4096,
                                             global_batch=256)

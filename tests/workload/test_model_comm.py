@@ -1,0 +1,161 @@
+"""Unit tests for the workload compiler's analytic side: per-layer gradient
+decomposition, DDP bucket packing, and the backward-pass timeline."""
+import pytest
+
+from repro.configs import ARCH_NAMES
+from repro.core.workload import (HostSpec, build_timeline, get_model_config,
+                                 grad_dtype_bytes, grad_segments,
+                                 pack_buckets, total_dp_grad_bytes)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("variant", ["full", "smoke"])
+def test_segments_mirror_param_count_exactly(arch, variant):
+    """The per-segment decomposition must sum to ModelConfig.param_count()
+    (and active_param_count()) term-for-term, for every registered arch."""
+    cfg = get_model_config(arch, variant)
+    segs = grad_segments(cfg)
+    assert sum(s.total_params for s in segs) == cfg.param_count()
+    assert sum(s.active_params for s in segs) == cfg.active_param_count()
+    # backward completion order: contiguous, head (untied) first, embed last
+    assert [s.order for s in segs] == list(range(len(segs)))
+    assert segs[-1].name == "embed"
+    if not cfg.tie_embeddings:
+        assert segs[0].name == "head"
+    else:
+        assert segs[0].name == f"layer{cfg.num_layers - 1}"
+
+
+def test_get_model_config_matches_registry():
+    """get_model_config delegates to the registry (smoke default)."""
+    from repro.models.registry import get_config
+    for arch in ARCH_NAMES:
+        assert get_model_config(arch) == get_config(arch, "smoke")
+        assert get_model_config(arch, "full") == get_config(arch, "full")
+    with pytest.raises(KeyError):
+        get_model_config("not-a-model")
+
+
+def test_workload_imports_jax_free():
+    """The whole workload package — including the registry path it uses for
+    model configs — must import without pulling jax (repro.models.__init__
+    is lazy for exactly this). Subprocess: sys.modules is shared in-session."""
+    import os
+    import subprocess
+    import sys
+    script = (
+        "import sys\n"
+        "import repro.core.workload as w\n"
+        "from repro.models.registry import get_config\n"
+        "assert w.get_model_config('deepseek-moe-16b') == "
+        "get_config('deepseek-moe-16b', 'smoke')\n"
+        "assert 'jax' not in sys.modules, 'workload import pulled jax'\n"
+        "print('JAXFREE_OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    proc = subprocess.run([sys.executable, "-c", script], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=120)
+    assert "JAXFREE_OK" in proc.stdout, proc.stdout + "\n" + proc.stderr
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-moe-16b",
+                                  "whisper-large-v3"])
+@pytest.mark.parametrize("bucket_bytes", [1 << 15, 1 << 17, 1 << 22])
+def test_bucket_packing_invariants(arch, bucket_bytes):
+    cfg = get_model_config(arch, "smoke")
+    plan = pack_buckets(cfg, bucket_bytes=bucket_bytes)
+    assert plan.total_grad_bytes == total_dp_grad_bytes(cfg)
+    assert plan.total_grad_bytes == sum(b.bytes for b in plan.buckets)
+    assert sum(b.params for b in plan.buckets) == cfg.param_count()
+    # DDP close-on-exceed: every bucket but the last is at least the cap
+    for b in plan.buckets[:-1]:
+        assert b.bytes >= bucket_bytes
+    # buckets launch in backward order
+    orders = [b.last_order for b in plan.buckets]
+    assert orders == sorted(orders)
+    assert [b.index for b in plan.buckets] == list(range(len(plan.buckets)))
+
+
+def test_dtype_awareness():
+    cfg = get_model_config("llama3.2-1b", "smoke")     # bfloat16 compute
+    assert grad_dtype_bytes(cfg) == 2
+    bf16 = pack_buckets(cfg, bucket_bytes=1 << 17)
+    f32 = pack_buckets(cfg, bucket_bytes=1 << 17, grad_dtype="float32")
+    assert f32.total_grad_bytes == 2 * bf16.total_grad_bytes
+    with pytest.raises(ValueError):
+        grad_dtype_bytes(cfg, "int7")
+
+
+def test_expert_sharding_excludes_routed_expert_grads():
+    cfg = get_model_config("deepseek-moe-16b", "smoke")
+    ddp = pack_buckets(cfg, bucket_bytes=1 << 17)
+    ep = pack_buckets(cfg, bucket_bytes=1 << 17, expert_sharding=True)
+    assert ddp.expert_grad_bytes == 0
+    assert ep.expert_grad_bytes > 0
+    # conservation: EP moves the expert bytes out of the DP allreduce
+    assert ep.total_grad_bytes + ep.expert_grad_bytes == ddp.total_grad_bytes
+    db = grad_dtype_bytes(cfg)
+    want = sum(s.expert_params for s in ep.segments) * db
+    assert ep.expert_grad_bytes == want
+    # a dense model is unaffected by the flag
+    dense = get_model_config("llama3.2-1b", "smoke")
+    a = pack_buckets(dense, bucket_bytes=1 << 17)
+    b = pack_buckets(dense, bucket_bytes=1 << 17, expert_sharding=True)
+    assert a.total_grad_bytes == b.total_grad_bytes
+
+
+def test_timeline_releases_buckets_in_backward_order():
+    cfg = get_model_config("whisper-large-v3", "smoke")   # enc-dec: most segs
+    plan = pack_buckets(cfg, bucket_bytes=1 << 17)
+    tl = build_timeline(cfg, plan, seq=128, global_batch=8, dp_hosts=8)
+    assert tl.forward_ns > 0 and tl.backward_ns > 0
+    assert tl.compute_ns == tl.forward_ns + tl.backward_ns
+    assert len(tl.bucket_release_ns) == len(plan.buckets)
+    # releases are staggered through (forward, forward + backward]
+    assert list(tl.bucket_release_ns) == sorted(tl.bucket_release_ns)
+    for r in tl.bucket_release_ns:
+        assert tl.forward_ns < r <= tl.compute_ns + 1e-6
+    assert len(set(tl.bucket_release_ns)) > 1
+    # backward segments tile [0, backward_ns] without gaps
+    t = 0.0
+    for seg in tl.segments:
+        assert seg.start_ns == pytest.approx(t)
+        assert seg.end_ns >= seg.start_ns
+        t = seg.end_ns
+    assert t == pytest.approx(tl.backward_ns)
+
+
+def test_timeline_hardware_constants_match_launch_mesh():
+    """HostSpec defaults are a jax-free copy of repro.launch.mesh's TPU v5e
+    constants; keep them pinned equal."""
+    mesh = pytest.importorskip("repro.launch.mesh")
+    spec = HostSpec()
+    assert spec.peak_flops == mesh.PEAK_FLOPS_BF16
+    assert spec.hbm_bw == mesh.HBM_BW
+
+
+def test_timeline_flops_consistent_with_launch_analysis():
+    """Per-segment backward FLOPs must sum to the 4ND share of the same
+    6ND accounting ``repro.launch.analysis.model_flops_per_step`` uses."""
+    from repro.launch.analysis import model_flops_per_step
+    cfg = get_model_config("deepseek-moe-16b", "smoke")
+    plan = pack_buckets(cfg, bucket_bytes=1 << 17)
+    seq, gb, dp = 128, 8, 8
+    tl = build_timeline(cfg, plan, seq=seq, global_batch=gb, dp_hosts=dp)
+    bwd_flops = sum(s.flops for s in tl.segments)
+    total = model_flops_per_step(cfg, "train", seq, gb)
+    assert bwd_flops == pytest.approx((4.0 / 6.0) * total / dp)
+
+
+def test_timeline_memory_bound_segments():
+    """With tiny token counts the roofline must go memory-bound (duration
+    set by bytes/hbm_bw, independent of further token reduction)."""
+    cfg = get_model_config("llama3.2-1b", "smoke")
+    plan = pack_buckets(cfg, bucket_bytes=1 << 20)
+    slow_hbm = HostSpec(hbm_bw=1e6)
+    t1 = build_timeline(cfg, plan, seq=2, global_batch=2, dp_hosts=2,
+                        host=slow_hbm)
+    t2 = build_timeline(cfg, plan, seq=2, global_batch=2, dp_hosts=2)
+    assert t1.backward_ns > t2.backward_ns

@@ -1,0 +1,103 @@
+"""Predictor tests, including the PR's pinned acceptance scenario."""
+import statistics
+
+import pytest
+
+from repro.core.canary import Algo, scaled_config
+from repro.core.workload import (HostSpec, get_scenario, list_scenarios,
+                                 predict_iteration, predict_scenario,
+                                 get_model_config, scaling_curves)
+
+
+def test_acceptance_deepseek_moe_congested_canary_beats_static():
+    """Acceptance scenario (ISSUE 4): config-derived deepseek-moe-16b smoke
+    workload on a congested fat tree. CANARY's predicted iteration time
+    beats STATIC_TREE's (mean over three pinned placements, the paper's
+    reporting style), the exposed-communication fraction is reported, and
+    every reduction is exact.
+
+    Buckets are packed at 1 MiB — a full-scale ~16 MiB DDP bucket at the
+    fabric's 1/16 scale — which is the regime the paper evaluates (Fig. 9:
+    Canary's advantage grows with message size; at KiB-scale buckets the
+    dynamic-tree setup cost is not amortized and STATIC_TREE can win, which
+    benchmarks/workload.py measures rather than hides).
+    """
+    iters = {}
+    for algo in (Algo.CANARY, Algo.STATIC_TREE):
+        preds = [predict_scenario("deepseek-moe/fat_tree", algo=algo,
+                                  congestion=True,
+                                  sim_cfg=scaled_config(4, seed=seed),
+                                  bucket_bytes=1 << 20, bytes_scale=1.0)
+                 for seed in (0, 1, 2)]
+        for p in preds:
+            assert p.correct, f"{algo}: inexact reduction"
+            assert 0.0 < p.exposed_comm_frac < 1.0
+            assert p.exposed_comm_ns == pytest.approx(
+                p.iteration_ns - p.compute_ns)
+        iters[str(algo)] = statistics.mean(p.iteration_ns for p in preds)
+    assert iters["canary"] < iters["static_tree"], iters
+
+
+def test_scenarios_registered_for_all_models_and_fabrics():
+    names = list_scenarios()
+    assert len(names) == 8
+    for model in ("llama3-dense", "deepseek-moe", "mamba2", "whisper"):
+        for topo in ("fat_tree", "three_tier"):
+            assert f"{model}/{topo}" in names
+    s = get_scenario("deepseek-moe/fat_tree")
+    assert s.expert_sharding
+    with pytest.raises(KeyError):
+        get_scenario("gpt5/fat_tree")
+
+
+def test_prediction_reports_overlap_accounting():
+    p = predict_scenario("llama3-dense/fat_tree", bytes_scale=0.03)
+    assert p.correct
+    assert p.iteration_ns >= p.compute_ns
+    assert p.iteration_ns >= p.comm_last_finish_ns
+    assert len(p.buckets) == len(p.plan.buckets)
+    for b in p.buckets:
+        assert b.finish_ns > b.release_ns          # allreduce takes >0 time
+    # jobs arrived staggered through the backward pass
+    releases = [b.release_ns for b in p.buckets]
+    assert releases == sorted(releases) and len(set(releases)) > 1
+
+
+def test_compute_bound_workload_exposes_almost_no_comm():
+    """A slow device under tiny traffic hides (nearly) all communication:
+    iteration time collapses to the compute roofline. Not exactly zero —
+    the final bucket releases at the very end of the backward pass, so its
+    allreduce is always exposed (as in real DDP)."""
+    slow = HostSpec(peak_flops=1e9, hbm_bw=1e9, mfu=1.0)
+    p = predict_scenario("mamba2/fat_tree", bytes_scale=0.01, host=slow)
+    assert p.correct
+    assert p.iteration_ns == pytest.approx(p.compute_ns, rel=1e-3)
+    assert p.exposed_comm_frac < 1e-3
+
+
+def test_scaling_curves_rows_and_fixed_placement():
+    model = get_model_config("llama3.2-1b", "smoke")
+    cfg = scaled_config(4, seed=5)
+    rows = scaling_curves(model, cfg, hosts_list=(4, 8),
+                          algos=((Algo.CANARY, 1), (Algo.RING, 1)),
+                          congestion_levels=(False,),
+                          bytes_scale=0.03, bucket_bytes=1 << 17)
+    assert len(rows) == 4
+    for r in rows:
+        assert r["correct"]
+        assert set(r) >= {"model", "hosts", "algo", "congestion",
+                          "iteration_ns", "exposed_comm_frac", "buckets"}
+    by_hosts = {(r["hosts"], r["algo"]): r for r in rows}
+    assert by_hosts[(4, "canary")]["iteration_ns"] > 0
+    # same hosts -> same compute roofline across algos (placement fixed)
+    assert by_hosts[(8, "canary")]["compute_ns"] == \
+        by_hosts[(8, "ring")]["compute_ns"]
+
+
+def test_predict_iteration_validates_inputs():
+    model = get_model_config("llama3.2-1b", "smoke")
+    cfg = scaled_config(4)
+    with pytest.raises(ValueError, match="participants or dp_hosts"):
+        predict_iteration(model, cfg)
+    with pytest.raises(ValueError, match="bytes_scale"):
+        predict_iteration(model, cfg, dp_hosts=4, bytes_scale=0.0)
