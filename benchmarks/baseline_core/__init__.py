@@ -1,0 +1,16 @@
+"""FROZEN pre-optimization copy of the simulator hot path — DO NOT EDIT.
+
+This package vendors the discrete-event core exactly as it stood before the
+hot-path overhaul PR (engine / types / topology / network / switch /
+hostproto / workloads / simulator, all-relative imports, no external deps).
+``benchmarks/perf.py`` runs it back-to-back with the live engine in the same
+process, so the reported speedup is a like-for-like ratio that is robust to
+machine noise — the acceptance contract ("events/sec vs the pre-PR engine")
+stays verifiable on any hardware, forever.
+
+The only permitted change to these files is the surgical removal of imports
+that would drag in the rest of the repo; behaviour must stay bit-identical
+to the PR-4 tree (the golden replays pin both engines to the same results).
+"""
+from .simulator import Simulator  # noqa: F401
+from .types import Algo, AllreduceJob, SimConfig, scaled_config, three_tier_config  # noqa: F401

@@ -1,0 +1,58 @@
+"""Discrete-event engine: clock, heap and event dispatch.
+
+This is the bottom layer of the simulator stack (see ``ARCHITECTURE.md``):
+it knows nothing about networks, switches or collectives — it orders
+``(time, seq, kind, a, b, c)`` tuples and hands them to per-kind handlers.
+The ``seq`` tiebreaker makes simultaneous events FIFO in push order, which is
+what makes whole runs bit-reproducible for the golden-replay tests.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List, Tuple
+
+# Event kinds (heap entries are (time, seq, kind, a, b, c) tuples).
+EV_ARRIVE_SWITCH = 0  # a=global switch idx, b=in port, c=packet
+EV_ARRIVE_HOST = 1    # a=host, c=packet
+EV_TIMER = 2          # a=switch, b=timer_seq, c=packet id
+EV_PUMP = 3           # a=host
+EV_RETX = 4           # a=host, c=(app, block, gen)
+EV_FAIL_SWITCH = 5    # a=switch
+EV_LEADER_DONE = 6    # a=leader host, c=(app, block, total)
+EV_JOB_ARRIVE = 7     # a=app (open-loop job arrival; fleet subsystem)
+
+Handler = Callable[[int, int, object], None]
+
+
+class EventLoop:
+    """A monotonic event heap with a stable FIFO tiebreak."""
+
+    __slots__ = ("heap", "now", "events", "_seq")
+
+    def __init__(self) -> None:
+        self.heap: List[Tuple[float, int, int, int, int, object]] = []
+        self.now = 0.0
+        self.events = 0
+        self._seq = 0
+
+    def push(self, t: float, kind: int, a: int, b: int, c: object) -> None:
+        self._seq += 1
+        heapq.heappush(self.heap, (t, self._seq, kind, a, b, c))
+
+    def run(self, handlers: Dict[int, Handler],
+            done: Callable[[], bool], max_events: int) -> None:
+        """Drain the heap, dispatching by event kind, until ``done()`` or empty.
+
+        ``max_events`` is a livelock safety valve, counted over the whole
+        loop's lifetime (the counter survives across ``run`` calls).
+        """
+        heap = self.heap
+        while heap:
+            if done():
+                break
+            t, _, kind, a, b, c = heapq.heappop(heap)
+            self.now = t
+            self.events += 1
+            if self.events > max_events:
+                raise RuntimeError("event budget exceeded — livelock?")
+            handlers[kind](a, b, c)

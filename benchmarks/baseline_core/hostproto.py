@@ -11,38 +11,23 @@ Everything a *host* NIC/CPU does lives here (see ``ARCHITECTURE.md``):
   :class:`~.switch.AggregationStrategy` like CANARY/STATIC_TREE, registered
   in the same registry; switches simply forward its packets (the base-class
   default), which is precisely what makes it "host-based".
-
-Hot-path notes (ARCHITECTURE.md §Performance): ``handle_pump`` is the
-``EV_PUMP`` handler itself (no facade trampoline) and draws from pre-resolved
-bindings set up in :meth:`HostProtocol.finalize`; ``arrive`` recycles every
-*linear* (non-multicast) packet through ``sim.pool`` once it has been fully
-processed — a packet delivered to a host is at end-of-life unless it is a
-multicast broadcast fan-out, whose object is shared across links.
 """
 from __future__ import annotations
 
 from collections import deque
-from heapq import heappush as _heappush
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
 from .engine import EV_LEADER_DONE, EV_PUMP, EV_RETX
 from .switch import AggregationStrategy, register_algorithm
-from .types import (APP_SHIFT, Algo, BLOCK_MASK, GEN_BITS, Packet, PacketKind,
-                    id_app, id_block, id_gen, make_id)
+from .types import (Algo, GEN_BITS, Packet, PacketKind, id_app, id_block,
+                    id_gen, make_id)
 
 _MAX_GEN = (1 << GEN_BITS) - 1
-_K_REDUCE = int(PacketKind.REDUCE)
-_K_BCAST = int(PacketKind.BCAST)
-_K_RETX_REQ = int(PacketKind.RETX_REQ)
-_K_FAIL = int(PacketKind.FAIL)
-_K_UNICAST = int(PacketKind.UNICAST_DATA)
-_K_NOISE = int(PacketKind.NOISE)
 
 
 class _HostState:
     __slots__ = ("queue", "pending", "pump_scheduled", "noise_peer",
-                 "noise_remaining", "noise_msg_idx", "noise_buf",
-                 "send_cursor")
+                 "noise_remaining", "noise_msg_idx", "send_cursor")
 
     def __init__(self) -> None:
         self.queue: Deque[Packet] = deque()
@@ -51,9 +36,6 @@ class _HostState:
         self.noise_peer = -1
         self.noise_remaining = 0
         self.noise_msg_idx = 0
-        # rest of the current background-noise message, pre-built (the
-        # workload layer batches generation per message; see workloads.py)
-        self.noise_buf: List[Packet] = []
         # lazy cursor over this host's allreduce contributions: [app, next_block]
         self.send_cursor: List[List[int]] = []
 
@@ -82,72 +64,45 @@ class HostProtocol:
         self.leader_state: Dict[Tuple[int, int], _LeaderState] = {}
         self.completed_total: Dict[Tuple[int, int], int] = {}
         self.fallback_blocks: Set[Tuple[int, int]] = set()
-        # per-run hot-path bindings, filled by finalize()
-        self._engine = sim.engine
-        self._push = sim.engine.push
-        self._push_timer = sim.engine.push_timer
-        self._send_from_host = sim.net.send_from_host
-        self._pool_free = sim.pool.free
-        self._next_strategy_pkt = None
-        self._on_host_packet = None
-        self._next_noise_pkt = None
-        self._sender_delay = None
-        self._noise_prob = sim.cfg.noise_prob
-
-    def finalize(self) -> None:
-        """Pre-resolve the strategy/workload callables (both layers are
-        constructed after this one). Called by the facade once per run."""
-        sim = self.sim
-        self._next_strategy_pkt = sim.strategy.next_host_packet
-        self._on_host_packet = sim.strategy.on_host_packet
-        self._next_noise_pkt = sim.workload.next_noise_packet
-        self._sender_delay = sim.workload.sender_delay_ns
 
     # ------------------------------------------------------------ send pump
     def schedule_pump(self, host: int, t: float) -> None:
         hs = self.hosts[host]
         if not hs.pump_scheduled:
             hs.pump_scheduled = True
-            self._push(t, EV_PUMP, host, 0, None)
+            self.sim.engine.push(t, EV_PUMP, host, 0, None)
 
-    def handle_pump(self, host: int, _b: int, _c: object) -> None:
-        """The ``EV_PUMP`` handler: send this host's next packet, if any."""
-        hs = self.hosts[host]
-        hs.pump_scheduled = False
+    def _next_host_packet(self, host: int) -> Optional[Packet]:
         sim = self.sim
-        if self._engine.stop:  # == sim.all_done(): set in job_finished
+        hs = self.hosts[host]
+        if hs.queue:
+            return hs.queue.popleft()
+        pkt = sim.strategy.next_host_packet(host)
+        if pkt is not None:
+            return pkt
+        return sim.workload.next_noise_packet(host, hs)
+
+    def pump(self, host: int) -> None:
+        sim = self.sim
+        hs = self.hosts[host]
+        if sim.all_done():
             return
         pkt = hs.pending
+        hs.pending = None
         if pkt is None:
-            queue = hs.queue
-            if queue:
-                pkt = queue.popleft()
-            else:
-                # the strategy walk reads only send_cursor (contract shared
-                # by every strategy: queue-driven ones enqueue into hs.queue)
-                pkt = self._next_strategy_pkt(host) if hs.send_cursor else None
-                if pkt is None:
-                    buf = hs.noise_buf
-                    pkt = buf.pop() if buf \
-                        else self._next_noise_pkt(host, hs)
-                    if pkt is None:
-                        return
+            pkt = self._next_host_packet(host)
+            if pkt is None:
+                return
             # §5.2.5 sender-side OS noise: delay this send with probability p.
-            if self._noise_prob:
-                delay = self._sender_delay(host)
-                if delay is not None:
-                    hs.pending = pkt
-                    hs.pump_scheduled = True
-                    self._push(self._engine.now + delay, EV_PUMP, host, 0,
-                               None)
-                    return
-        else:
-            hs.pending = None
-        nic_free = self._send_from_host(sim, host, pkt)
+            delay = sim.workload.sender_delay_ns(host)
+            if delay is not None:
+                hs.pending = pkt
+                hs.pump_scheduled = True
+                sim.engine.push(sim.now + delay, EV_PUMP, host, 0, None)
+                return
+        nic_free = sim.net.send_from_host(sim, host, pkt)
         hs.pump_scheduled = True
-        eng = self._engine
-        eng._seq = seq = eng._seq + 1
-        _heappush(eng.heap, (nic_free, seq, EV_PUMP, host, 0, None))
+        sim.engine.push(nic_free, EV_PUMP, host, 0, None)
 
     # ----------------------------------------------------------- completion
     def complete_at_host(self, host: int, app: int, block: int,
@@ -161,10 +116,9 @@ class HostProtocol:
             sim.trace.on_host_complete(host, app, block)
         if value != sim.expected_total(app, block):
             sim.mismatches += 1
-        remaining = sim.app_remaining[app] - 1
-        sim.app_remaining[app] = remaining
+        sim.app_remaining[app] -= 1
         sim.completed_blocks += 1
-        if remaining == 0:
+        if sim.app_remaining[app] == 0:
             sim.job_finished(app)
 
     # ---------------------------------------------------------- leader role
@@ -211,67 +165,45 @@ class HostProtocol:
         self.schedule_pump(host, sim.now)
 
     # --------------------------------------------------------- host arrival
-    def handle_arrive(self, host: int, _b: int, pkt: Packet) -> None:
-        """The ``EV_ARRIVE_HOST`` handler. Processes the packet, then
-        recycles it unless it is a shared multicast object."""
+    def arrive(self, host: int, pkt: Packet) -> None:
         sim = self.sim
         kind = pkt.kind
-        if kind == _K_NOISE:
-            self._pool_free(pkt)
+        if kind == PacketKind.NOISE:
             return
-        if self._on_host_packet(host, pkt):
-            if not pkt.multicast:
-                self._pool_free(pkt)
+        if sim.strategy.on_host_packet(host, pkt):
             return
-        pid = pkt.id
-        app = pid >> APP_SHIFT
-        block = (pid >> GEN_BITS) & BLOCK_MASK
-        if kind == _K_REDUCE:
-            if sim.leader_of(app, block) == host:
-                key = (app, block)
-                st = self.leader_state.get(key)
-                if st is None:
-                    st = self.leader_state[key] = _LeaderState()
-                gen = pid & _MAX_GEN
-                if not (st.done or st.pending_done or gen != st.gen):
-                    st.value += pkt.value
-                    st.counter += pkt.counter
-                    if sim.trace is not None:
-                        sim.trace.on_leader_merge(host, pkt)
-                    if pkt.switch_addr >= 0:
-                        st.restorations.append((pkt.switch_addr,
-                                                pkt.port_stamp))
-                    if st.counter >= sim.nparts[app] - 1:
-                        total = st.value + sim.contribution_of(app, block,
-                                                               host)
-                        st.pending_done = True
-                        if sim.trace is not None:
-                            sim.trace.on_leader_complete(host, app, block,
-                                                         gen)
-                        # leader-side aggregation cost r (§3.2.2)
-                        self._push(self._engine.now
-                                   + sim.cfg.leader_aggregate_ns,
-                                   EV_LEADER_DONE, host, 0,
-                                   (app, block, total))
-            self._pool_free(pkt)
+        app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
+        if kind == PacketKind.REDUCE:
+            if sim.leader_of(app, block) != host:
+                return
+            key = (app, block)
+            st = self.leader_state.setdefault(key, _LeaderState())
+            if st.done or st.pending_done or gen != st.gen:
+                return  # stale generation or already reduced
+            st.value += pkt.value
+            st.counter += pkt.counter
+            if sim.trace is not None:
+                sim.trace.on_leader_merge(host, pkt)
+            if pkt.switch_addr >= 0:
+                st.restorations.append((pkt.switch_addr, pkt.port_stamp))
+            if st.counter >= len(sim.leaders[app]) - 1:
+                total = st.value + sim.contribution_of(app, block, host)
+                st.pending_done = True
+                if sim.trace is not None:
+                    sim.trace.on_leader_complete(host, app, block, gen)
+                # leader-side aggregation cost r (§3.2.2)
+                sim.engine.push(sim.now + sim.cfg.leader_aggregate_ns,
+                                EV_LEADER_DONE, host, 0, (app, block, total))
             return
-        if kind == _K_BCAST or kind == _K_UNICAST:
+        if kind in (PacketKind.BCAST, PacketKind.UNICAST_DATA):
             self.complete_at_host(host, app, block, pkt.value)
-            if not pkt.multicast:
-                self._pool_free(pkt)
             return
-        if kind == _K_RETX_REQ:
+        if kind == PacketKind.RETX_REQ:
             self.leader_handle_retx(host, app, block, pkt.src)
-            self._pool_free(pkt)
             return
-        if kind == _K_FAIL:
+        if kind == PacketKind.FAIL:
             self.host_handle_fail(host, pkt)
-            self._pool_free(pkt)
             return
-
-    def arrive(self, host: int, pkt: Packet) -> None:
-        """Compat entry point (the engine dispatches ``handle_arrive``)."""
-        self.handle_arrive(host, 0, pkt)
 
     # ----------------------------------------------------------- reliability
     def leader_handle_retx(self, leader: int, app: int, block: int,
@@ -288,9 +220,7 @@ class HostProtocol:
             self.hosts[leader].queue.append(up)
             self.schedule_pump(leader, sim.now)
             return
-        st = self.leader_state.get(key)
-        if st is None:
-            st = self.leader_state[key] = _LeaderState()
+        st = self.leader_state.setdefault(key, _LeaderState())
         if st.pending_done:
             return  # completion already in flight
         if sim.now - st.last_fail_ns < cfg.retx_timeout_ns / 2:
@@ -341,25 +271,15 @@ class HostProtocol:
         if sim.trace is not None:
             sim.trace.on_host_send(host, rp)
         self.hosts[host].queue.append(rp)
-        self._push_timer(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                         (app, block, gen))
+        sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
+                        (app, block, gen))
         self.schedule_pump(host, sim.now)
-
-    def handle_retx(self, host: int, _b: int, c: object) -> None:
-        """The ``EV_RETX`` handler."""
-        app, block, gen = c
-        self.host_retx_check(host, app, block, gen)
-
-    def handle_leader_done(self, host: int, _b: int, c: object) -> None:
-        """The ``EV_LEADER_DONE`` handler."""
-        app, block, total = c
-        self.leader_block_done(host, app, block, total)
 
     def host_retx_check(self, host: int, app: int, block: int,
                         gen: int) -> None:
         sim = self.sim
         cfg = sim.cfg
-        if sim.apps_active == 0:
+        if sim.all_done():
             return
         flags = sim.have.get((app, host))
         if flags is None or flags[block]:
@@ -371,8 +291,8 @@ class HostProtocol:
                      id=make_id(app, block, gen),
                      size_bytes=cfg.header_bytes + 16, src=host)
         self.hosts[host].queue.append(req)
-        self._push_timer(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                         (app, block, gen))
+        sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
+                        (app, block, gen))
         self.schedule_pump(host, sim.now)
 
 
@@ -441,25 +361,16 @@ class RingStrategy(AggregationStrategy):
         c = (r - step) % rs.p
         dest = rs.order[(r + 1) % rs.p]
         val = rs.chunk_vals[r][c]
-        payload = sim.cfg.payload_bytes
-        header = sim.cfg.header_bytes
-        alloc = self._pool.alloc
+        cfg = sim.cfg
         remaining = rs.chunk_bytes
-        last = rs.pkts_per_chunk - 1
-        queue = sim.hostproto.hosts[host].queue
         for i in range(rs.pkts_per_chunk):
-            take = payload if remaining >= payload else remaining
+            take = min(cfg.payload_bytes, remaining)
             remaining -= take
-            pkt = alloc()
-            pkt.kind = PacketKind.RING
-            pkt.dest = dest
-            pkt.id = app
-            pkt.value = val if i == last else 0
-            pkt.size_bytes = take + header
-            pkt.src = host
-            pkt.chunk = c
-            pkt.step = step
-            queue.append(pkt)
+            pkt = Packet(kind=PacketKind.RING, dest=dest, id=app,
+                         value=val if i == rs.pkts_per_chunk - 1 else 0,
+                         size_bytes=take + cfg.header_bytes, src=host,
+                         chunk=c, step=step)
+            sim.hostproto.hosts[host].queue.append(pkt)
         sim.hostproto.schedule_pump(host, sim.now)
 
     def _receive(self, host: int, pkt: Packet) -> None:
@@ -467,20 +378,19 @@ class RingStrategy(AggregationStrategy):
         rs = self.ring[app]
         r = rs.rank[host]
         counts = rs.recv_count[r]
-        step = pkt.step
-        got = counts.get(step, 0) + 1
-        counts[step] = got
+        got = counts.get(pkt.step, 0) + 1
+        counts[pkt.step] = got
         if pkt.value:
-            if step < rs.p - 1:
+            if pkt.step < rs.p - 1:
                 rs.chunk_vals[r][pkt.chunk] += pkt.value  # reduce-scatter phase
             else:
                 rs.chunk_vals[r][pkt.chunk] = pkt.value   # all-gather phase
         if got < rs.pkts_per_chunk:
             return
-        counts.pop(step, None)
+        counts.pop(pkt.step, None)
         rs.done_steps[r] += 1
-        if step + 1 <= rs.steps - 1:
-            self._enqueue_send(app, host, step + 1)
+        if pkt.step + 1 <= rs.steps - 1:
+            self._enqueue_send(app, host, pkt.step + 1)
         # steps can *complete* out of order when paths differ; the host is
         # finished only once every step's chunk has fully arrived.
         if rs.done_steps[r] == rs.steps:
@@ -500,8 +410,7 @@ class RingStrategy(AggregationStrategy):
             if not flags[b]:
                 flags[b] = 1
                 newly += 1
-        remaining = sim.app_remaining[app] - newly
-        sim.app_remaining[app] = remaining
+        sim.app_remaining[app] -= newly
         sim.completed_blocks += newly
-        if remaining == 0:
+        if sim.app_remaining[app] == 0:
             sim.job_finished(app)

@@ -16,31 +16,20 @@ simulator asserts that every participant received the true sum for every
 block, under any combination of congestion, stragglers, collisions, drops and
 switch failures. A run is therefore both a performance measurement and an
 end-to-end correctness proof of the protocol implementation.
-
-Hot-path wiring (ARCHITECTURE.md §Performance): construction ends with a
-*finalize* pass — every layer pre-resolves the callables it dispatches to per
-packet, the topology binds the engine's ``push`` directly, and ``run`` hands
-the engine a pre-resolved handler table indexed by event kind. ``all_done``
-is O(1) via the ``apps_active`` counter, and per-app constants (leader maps,
-expected totals, packet sizes) are precomputed at job setup so no hot path
-re-derives them per packet.
 """
 from __future__ import annotations
 
-import gc
 import random
 from typing import Dict, List, Optional, Set, Tuple
 
 from . import network as _network  # noqa: F401  (registers "fat_tree")
 from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
-                     EV_JOB_ARRIVE, EV_LEADER_DONE, EV_LINK_ARRIVE_HOST,
-                     EV_LINK_ARRIVE_SWITCH, EV_PUMP, EV_RETX, EV_TIMER,
-                     EventLoop, N_EVENT_KINDS)
+                     EV_JOB_ARRIVE, EV_LEADER_DONE, EV_PUMP, EV_RETX,
+                     EV_TIMER, EventLoop)
 from .hostproto import HostProtocol
 from .switch import SwitchLayer, make_strategy
 from .topology import make_topology
-from .types import (Algo, AllreduceJob, Packet, PacketPool, SimConfig,
-                    SimResult)
+from .types import Algo, AllreduceJob, Packet, SimConfig, SimResult
 from .workloads import CongestionWorkload
 
 _CONTRIB_MULT = 1000003
@@ -69,11 +58,6 @@ class Simulator:
         self.net = make_topology(cfg)
         self.rng = random.Random(cfg.seed)
         self.engine = EventLoop()
-        self.pool = PacketPool()
-        # hot-path drop state (tx_to_* in topology.py): the RNG is drawn
-        # only when drop_prob > 0, exactly like maybe_drop()
-        self._drop_prob = cfg.drop_prob
-        self._rng_random = self.rng.random
 
         # opt-in aggregation-provenance recording (repro.core.trace). The
         # recorder is observation-only: every layer guards its hook calls
@@ -81,19 +65,14 @@ class Simulator:
         # state, so traced runs replay the goldens bit-for-bit.
         self.trace = None
         if cfg.trace:
-            from ..trace.recorder import TraceRecorder  # deferred: optional
-            self.trace = TraceRecorder(self)
+            # vendored frozen copy: tracing needs the live repro package
+            raise RuntimeError("baseline_core does not support trace=True")
 
         # layers (construction order matters: strategies touch hostproto)
         self.switch = SwitchLayer(self, self.net.num_switches)
         self.hostproto = HostProtocol(self, cfg.num_hosts)
         self.workload = CongestionWorkload(self, noise_hosts)
         self.strategy = make_strategy(self.algo, self)
-        # finalize: every layer pre-resolves its per-packet callables now
-        # that the full layer graph exists (ARCHITECTURE.md §Performance)
-        self.switch.finalize()
-        self.hostproto.finalize()
-        self.net.bind(self)
 
         # multi-tenant fleet state (repro.core.fleet). With no admission
         # controller everything below stays empty and the dataplane behaves
@@ -108,14 +87,10 @@ class Simulator:
         if admission is not None:
             admission.attach(self)
 
-        # completion tracking. ``apps_active`` counts apps with unfinished
-        # blocks so ``all_done`` is O(1) — it is decremented exactly once
-        # per app (in job_finished, or at activation for degenerate
-        # single-participant jobs).
+        # completion tracking
         self.have: Dict[Tuple[int, int], bytearray] = {}
         self.app_remaining: Dict[int, int] = {}
         self.app_done_ns: Dict[int, float] = {}
-        self.apps_active = 0
         self.mismatches = 0
 
         # counters (mutated by the layers)
@@ -127,18 +102,11 @@ class Simulator:
         self.dropped = 0
         self.completed_blocks = 0
 
-        # per-job precomputation (hot-path constants; see _setup_jobs)
+        # per-job precomputation
         self.blocks: Dict[int, int] = {}
         self.leaders: Dict[int, List[int]] = {}
         self.partset: Dict[int, Set[int]] = {}
         self.contrib_sum_base: Dict[int, Tuple[int, int]] = {}
-        self.nparts: Dict[int, int] = {}               # len(participants)
-        self.pkt_bytes: Dict[int, int] = {}            # REDUCE wire size
-        self._leader_fixed: Dict[int, int] = {}        # reduce/broadcast root
-        self._contrib_root: Dict[int, int] = {}        # broadcast source
-        self._barrier_apps: Set[int] = set()
-        self._et_base: Dict[int, int] = {}             # expected_total =
-        self._et_slope: Dict[int, int] = {}            #   base + slope * block
         self._setup_jobs()
 
     # ------------------------------------------------------------------ setup
@@ -152,43 +120,21 @@ class Simulator:
             self.blocks[app] = B
             self.partset[app] = set(parts)
             self.leaders[app] = parts
-            self.nparts[app] = len(parts)
             self.tenant_of[app] = job.tenant if job.tenant >= 0 else app
             s1 = sum(h + 1 for h in parts)
             self.contrib_sum_base[app] = (s1, len(parts))
             self.job_submit_ns[app] = max(0.0, job.arrival_ns)
-            # hot-path constants: leader map, wire size, expected totals
-            coll = job.collective
-            if coll in ("reduce", "broadcast"):
-                root = job.root if job.root is not None else parts[0]
-                self._leader_fixed[app] = root
-            self.pkt_bytes[app] = cfg.header_bytes + 8 \
-                if coll == "barrier" else cfg.mtu_bytes
-            if coll == "barrier":
-                self._barrier_apps.add(app)
-                self._et_base[app] = 0
-                self._et_slope[app] = 0
-            elif coll == "broadcast":
-                root = self._leader_fixed[app]
-                self._contrib_root[app] = root
-                self._et_base[app] = (root + 1) * _CONTRIB_MULT + 7919 * app
-                self._et_slope[app] = 31
-            else:
-                p = len(parts)
-                self._et_base[app] = _CONTRIB_MULT * s1 + p * 7919 * app
-                self._et_slope[app] = 31 * p
             # completion tracking is registered up front for every job —
             # including ones that arrive later — so ``all_done`` keeps the
             # engine running until open-loop arrivals have completed too.
-            if coll == "reduce":
-                root = self._leader_fixed[app]
+            if job.collective == "reduce":
+                root = job.root if job.root is not None else parts[0]
                 self.have[(app, root)] = bytearray(B)
                 self.app_remaining[app] = B
             else:
                 for h in parts:
                     self.have[(app, h)] = bytearray(B)
                 self.app_remaining[app] = len(parts) * B
-            self.apps_active += 1
             if job.arrival_ns > 0.0:
                 self.engine.push(job.arrival_ns, EV_JOB_ARRIVE, app, 0, None)
             else:
@@ -212,9 +158,6 @@ class Simulator:
             for b in range(B):
                 flags[b] = 1
             self.app_remaining[app] = 0
-            self.apps_active -= 1
-            if self.apps_active == 0:
-                self.engine.stop = True
             self.completed_blocks += B
             self.job_start_ns[app] = self.now
             self.app_done_ns[app] = self.now
@@ -234,32 +177,33 @@ class Simulator:
     def job_finished(self, app: int) -> None:
         """All of ``app``'s blocks completed: stamp the finish time and give
         the admission controller its quota slots back."""
-        self.apps_active -= 1
-        if self.apps_active == 0:
-            self.engine.stop = True  # loop breaks before the next dispatch
         self.app_done_ns[app] = self.now
         if self.admission is not None:
             self.admission.on_job_done(self, app)
 
     # ------------------------------------------------------------- protocol
     def expected_total(self, app: int, block: int) -> int:
-        # precomputed affine form of the original per-call derivation; see
-        # _setup_jobs (barrier: 0; broadcast: the root's contribution;
-        # allreduce/reduce: MULT*s1 + p*(31*block + 7919*app))
-        return self._et_base[app] + self._et_slope[app] * block
+        c = self.jobs[app].collective
+        if c == "barrier":
+            return 0
+        if c == "broadcast":
+            return contribution(app, block, self.leader_of(app, block))
+        s1, p = self.contrib_sum_base[app]
+        return _CONTRIB_MULT * s1 + p * (31 * block + 7919 * app)
 
     def leader_of(self, app: int, block: int) -> int:
-        root = self._leader_fixed.get(app)
-        if root is not None:
-            return root
+        job = self.jobs[app]
+        if job.collective in ("reduce", "broadcast"):
+            return job.root if job.root is not None else self.leaders[app][0]
         parts = self.leaders[app]
         return parts[block % len(parts)]
 
     def contribution_of(self, app: int, block: int, host: int) -> int:
-        if app in self._barrier_apps:
+        c = self.jobs[app].collective
+        if c == "barrier":
             return 0
-        root = self._contrib_root.get(app)
-        if root is not None:  # broadcast: only the source contributes
+        if c == "broadcast":
+            root = self.leader_of(app, block)
             return contribution(app, block, root) if host == root else 0
         return contribution(app, block, host)
 
@@ -279,7 +223,7 @@ class Simulator:
         return self.switch.tables
 
     def maybe_drop(self) -> bool:
-        return self._drop_prob > 0.0 and self._rng_random() < self._drop_prob
+        return self.cfg.drop_prob > 0.0 and self.rng.random() < self.cfg.drop_prob
 
     def arrive_switch(self, t: float, sw: int, port: int, pkt: Packet) -> None:
         self.engine.push(t, EV_ARRIVE_SWITCH, sw, port, pkt)
@@ -288,44 +232,34 @@ class Simulator:
         self.engine.push(t, EV_ARRIVE_HOST, host, 0, pkt)
 
     def all_done(self) -> bool:
-        return self.apps_active == 0
+        return all(v == 0 for v in self.app_remaining.values())
 
     # -------------------------------------------------------------------- run
-    def _handle_fail_switch(self, a: int, b: int, c: object) -> None:
-        self.switch.fail_switch(a)
+    def _handle_pump(self, a: int, b: int, c: object) -> None:
+        self.hostproto.hosts[a].pump_scheduled = False
+        self.hostproto.pump(a)
 
-    def _handle_job_arrive(self, a: int, b: int, c: object) -> None:
-        self._activate_job(a)
+    def _handle_retx(self, a: int, b: int, c: object) -> None:
+        app, block, gen = c
+        self.hostproto.host_retx_check(a, app, block, gen)
+
+    def _handle_leader_done(self, a: int, b: int, c: object) -> None:
+        app, block, total = c
+        self.hostproto.leader_block_done(a, app, block, total)
 
     def run(self) -> SimResult:
         cfg = self.cfg
-        # pre-resolved handler table, indexed by event kind (engine.run
-        # dispatches via one list index + call per event)
-        handlers = [None] * N_EVENT_KINDS
-        handlers[EV_ARRIVE_SWITCH] = self.switch.arrive
-        handlers[EV_ARRIVE_HOST] = self.hostproto.handle_arrive
-        # staged link arrivals dispatch to the same layer entry points (the
-        # engine unwraps the Link's FIFO head into the packet argument)
-        handlers[EV_LINK_ARRIVE_SWITCH] = self.switch.arrive
-        handlers[EV_LINK_ARRIVE_HOST] = self.hostproto.handle_arrive
-        handlers[EV_TIMER] = self.switch.on_timer
-        handlers[EV_PUMP] = self.hostproto.handle_pump
-        handlers[EV_RETX] = self.hostproto.handle_retx
-        handlers[EV_FAIL_SWITCH] = self._handle_fail_switch
-        handlers[EV_LEADER_DONE] = self.hostproto.handle_leader_done
-        handlers[EV_JOB_ARRIVE] = self._handle_job_arrive
-        # the event loop allocates millions of short-lived tuples/packets and
-        # creates no reference cycles; pausing the cyclic GC for the drain is
-        # worth ~10-15% wall time (state restored on every exit path)
-        gc_was_enabled = gc.isenabled()
-        if gc_was_enabled:
-            gc.disable()
-        self.engine.stop = self.all_done()
-        try:
-            self.engine.run(handlers, cfg.max_events)
-        finally:
-            if gc_was_enabled:
-                gc.enable()
+        handlers = {
+            EV_ARRIVE_SWITCH: self.switch.arrive,
+            EV_ARRIVE_HOST: lambda a, b, c: self.hostproto.arrive(a, c),
+            EV_PUMP: self._handle_pump,
+            EV_TIMER: self.switch.on_timer,
+            EV_RETX: self._handle_retx,
+            EV_FAIL_SWITCH: lambda a, b, c: self.switch.fail_switch(a),
+            EV_LEADER_DONE: self._handle_leader_done,
+            EV_JOB_ARRIVE: lambda a, b, c: self._activate_job(a),
+        }
+        self.engine.run(handlers, self.all_done, cfg.max_events)
         end = max(self.app_done_ns.values()) if self.app_done_ns else self.now
         utils = self.net.utilizations(end if end > 0 else 1.0)
         goodput = {}

@@ -19,34 +19,18 @@ Registering a new collective::
 
 No engine, topology or facade changes are needed — the facade looks the
 algorithm up by ``Algo`` value at construction time.
-
-Hot-path notes (ARCHITECTURE.md §Performance): ``SwitchLayer.finalize``
-pre-resolves the strategy's dataplane hooks and the topology's forwarding
-methods into instance attributes once per run, arrival dispatch branches on
-the raw packet-kind int, and descriptor timers use *lazy cancellation* — a
-``live_timers`` registry maps an armed timer's sequence number to its
-descriptor; firing early or deallocating unregisters the timer, and the
-stale ``EV_TIMER`` heap entry is skipped with a single failed dict lookup
-when it pops (it still counts as a dispatched event, preserving the golden
-``events`` counts). Strategies recycle consumed REDUCE packets through
-``sim.pool`` — a packet merged into a descriptor is at end-of-life; anything
-forwarded on (stragglers, collisions, bypass) stays live.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Type
 
 from .engine import EV_RETX, EV_TIMER
-from .types import (APP_SHIFT, Algo, BLOCK_MASK, Descriptor, GEN_BITS, Packet,
-                    PacketKind, id_app)
+from .types import (Algo, Descriptor, Packet, PacketKind, id_app, id_block,
+                    make_id)
 
 # kinds the switch dataplane never inspects — pure forwarding
 _PASSTHROUGH = (PacketKind.NOISE, PacketKind.RING, PacketKind.RETX_REQ,
                 PacketKind.FAIL, PacketKind.UNICAST_DATA)
-_K_REDUCE = int(PacketKind.REDUCE)
-_K_BCAST = int(PacketKind.BCAST)
-_K_RESTORE = int(PacketKind.RESTORE)
-_K_RETX_REQ = int(PacketKind.RETX_REQ)  # first of the passthrough id range
 
 
 class SwitchLayer:
@@ -60,71 +44,46 @@ class SwitchLayer:
         self.failed = [False] * num_switches
         self.desc_high = [0] * num_switches
         self.timer_seq = 0
-        # lazy timer cancellation: timer_seq -> armed Descriptor. Entries are
-        # removed when the descriptor fires (early or by timeout) or is
-        # deallocated; a stale EV_TIMER pop then misses here and is dropped.
-        self.live_timers: Dict[int, Descriptor] = {}
-        # pre-resolved in finalize() once the strategy exists
-        self._on_reduce = None
-        self._on_bcast = None
-        self._fwd_host = None
-        self._fwd_switch = None
-        self._pool_free = None
-
-    def finalize(self) -> None:
-        """Pre-resolve per-run hot-path callables (strategy hooks + topology
-        forwarding). Called by the facade after every layer is built."""
-        sim = self.sim
-        self._on_reduce = sim.strategy.on_switch_reduce
-        self._on_bcast = sim.strategy.on_switch_bcast
-        self._fwd_host = sim.net.forward_toward_host
-        self._fwd_switch = sim.net.forward_toward_switch
-        self._pool_free = sim.pool.free
 
     # ------------------------------------------------------------- dispatch
     def arrive(self, sw: int, in_port: int, pkt: Packet) -> None:
         sim = self.sim
         if self.failed[sw]:
             sim.dropped += 1
-            if not pkt.multicast:
-                self._pool_free(pkt)
             return
         kind = pkt.kind
-        if kind >= _K_RETX_REQ:
-            # _PASSTHROUGH kinds (RETX_REQ..RING, a contiguous id range:
-            # one compare for the most common arrivals): pure forwarding
-            self._fwd_host(sim, sw, pkt)
-        elif kind == _K_REDUCE:
-            self._on_reduce(sw, in_port, pkt)
-        elif kind == _K_BCAST:
-            self._on_bcast(sw, pkt)
-        else:  # RESTORE
+        if kind in _PASSTHROUGH:
+            sim.net.forward_toward_host(sim, sw, pkt)
+            return
+        if kind == PacketKind.RESTORE:
             if pkt.dest_switch == sw:
                 self.restore_at(sw, pkt)
-                self._pool_free(pkt)
             else:
-                self._fwd_switch(sim, sw, pkt)
+                sim.net.forward_toward_switch(sim, sw, pkt)
+            return
+        if kind == PacketKind.REDUCE:
+            sim.strategy.on_switch_reduce(sw, in_port, pkt)
+        elif kind == PacketKind.BCAST:
+            sim.strategy.on_switch_bcast(sw, pkt)
 
     def on_timer(self, sw: int, timer_seq: int, pid: int) -> None:
-        # lazy cancellation: a cancelled/fired timer is a single missed
-        # dict lookup here (the heap entry was left in place)
-        desc = self.live_timers.pop(timer_seq, None)
-        if desc is not None and not self.failed[sw]:
+        desc = self.tables[sw].get(pid)
+        if desc is not None and desc.timer_seq == timer_seq and \
+                not desc.sent and not self.failed[sw]:
             self.sim.strategy.on_descriptor_timeout(sw, desc)
 
     def fail_switch(self, sw: int) -> None:
         self.failed[sw] = True
 
     # ------------------------------------------------------------- helpers
-    # (descriptor high-water tracking is inlined at the two allocation sites
-    # in the strategies: ``if len(table) > desc_high[sw]: ...``)
+    def note_high_water(self, sw: int) -> None:
+        if len(self.tables[sw]) > self.desc_high[sw]:
+            self.desc_high[sw] = len(self.tables[sw])
+
     def dealloc(self, sw: int, desc: Descriptor) -> None:
         self.tables[sw].pop(desc.id, None)
-        slots = self.slots[sw]
-        if slots.get(desc.slot) == desc.id:
-            del slots[desc.slot]
-        if desc.timer_seq:
-            self.live_timers.pop(desc.timer_seq, None)
+        if self.slots[sw].get(desc.slot) == desc.id:
+            self.slots[sw].pop(desc.slot, None)
 
     def restore_at(self, sw: int, pkt: Packet) -> None:
         """Tree restoration (§3.2.1): forward data out the stamped ports."""
@@ -185,21 +144,6 @@ class AggregationStrategy:
 
     def __init__(self, sim):
         self.sim = sim
-        # per-run hot-path bindings (every layer the hooks touch exists
-        # before strategies are constructed)
-        cfg = sim.cfg
-        self._engine = sim.engine
-        self._push = sim.engine.push
-        self._push_timer = sim.engine.push_timer
-        self._fwd_host = sim.net.forward_toward_host
-        self._pool = sim.pool
-        self._trace = sim.trace
-        self._mtu = cfg.mtu_bytes
-        self._retx_timeout = cfg.retx_timeout_ns
-        # per-app send constants, built lazily on first pump (after
-        # activation, so the admission degrade decision is already made):
-        # (B, parts, p, fixed_leader, nhosts, size, degraded, plain, abase)
-        self._send_cache: Dict[int, tuple] = {}
 
     # ---- job setup ---------------------------------------------------------
     def setup_job(self, app: int, job, parts: List[int]) -> None:
@@ -215,82 +159,55 @@ class AggregationStrategy:
             hp.schedule_pump(h, sim.now)
 
     # ---- host send generation ---------------------------------------------
-    def _send_consts(self, app: int) -> tuple:
-        """Per-app constants for the cursor walk. Safe to cache: the
-        participant list, leader map, wire size and the admission degrade
-        decision are all fixed before ``setup_job`` schedules the first
-        pump (a retx *fallback* is per-block state, not per-app)."""
-        sim = self.sim
-        parts = sim.leaders[app]
-        consts = (sim.blocks[app], parts, len(parts),
-                  sim._leader_fixed.get(app), sim.nparts[app],
-                  sim.pkt_bytes[app], app in sim.bypass_apps,
-                  app not in sim._barrier_apps
-                  and app not in sim._contrib_root,
-                  7919 * app)
-        self._send_cache[app] = consts
-        return consts
-
     def next_host_packet(self, host: int) -> Optional[Packet]:
         """Produce this host's next allreduce send (monolith cursor walk)."""
         sim = self.sim
         hs = sim.hostproto.hosts[host]
-        cache = self._send_cache
+        cfg = sim.cfg
         for cur in hs.send_cursor:
             app, nxt = cur
-            consts = cache.get(app)
-            if consts is None:
-                consts = self._send_consts(app)
-            B, parts, p, fixed, nhosts, size, degraded, plain, abase = consts
+            B = sim.blocks[app]
             # admission-degraded apps ride the §3.3 host-based path whatever
             # the strategy: bypass packets straight to the leader, which
             # keeps its own contribution local and unicasts the result
+            degraded = app in sim.bypass_apps
             if self.leader_skips_self or degraded:
-                if fixed is None:
-                    while nxt < B and parts[nxt % p] == host:
-                        nxt += 1  # leader keeps its contribution local (§3.1.4)
-                elif fixed == host:
-                    nxt = B
+                while nxt < B and sim.leader_of(app, nxt) == host:
+                    nxt += 1  # the leader keeps its contribution local (§3.1.4)
             if nxt < B:
                 cur[1] = nxt + 1
-                pkt = self._pool.alloc()
-                pkt.kind = PacketKind.REDUCE
-                pkt.dest = parts[nxt % p] if fixed is None else fixed
-                pkt.id = (app << APP_SHIFT) | (nxt << GEN_BITS)
-                pkt.counter = 1
-                pkt.hosts = nhosts
-                # inline contribution() for plain allreduce/reduce apps
-                pkt.value = (host + 1) * 1000003 + 31 * nxt + abase if plain \
-                    else sim.contribution_of(app, nxt, host)
-                pkt.bypass = degraded
-                pkt.size_bytes = size
-                pkt.src = host
-                if self._trace is not None:
-                    self._trace.on_host_send(host, pkt)
+                pid = make_id(app, nxt, 0)
+                size = cfg.header_bytes + 8 \
+                    if sim.jobs[app].collective == "barrier" else cfg.mtu_bytes
+                pkt = Packet(kind=PacketKind.REDUCE,
+                             dest=sim.leader_of(app, nxt), id=pid, counter=1,
+                             hosts=len(sim.leaders[app]),
+                             value=sim.contribution_of(app, nxt, host),
+                             bypass=degraded, size_bytes=size, src=host)
+                if sim.trace is not None:
+                    sim.trace.on_host_send(host, pkt)
                 if self.uses_retx_timers or degraded:
                     # loss detection is part of the Canary protocol (§3.3);
                     # static-tree systems restart from scratch instead.
-                    self._push_timer(self._engine.now + self._retx_timeout,
-                                     EV_RETX, host, 0, (app, nxt, 0))
+                    sim.engine.push(sim.now + cfg.retx_timeout_ns, EV_RETX,
+                                    host, 0, (app, nxt, 0))
                 return pkt
             cur[1] = nxt
         return None
 
     # ---- switch dataplane hooks --------------------------------------------
     def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
-        self._fwd_host(self.sim, sw, pkt)
+        self.sim.net.forward_toward_host(self.sim, sw, pkt)
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
-        self._fwd_host(self.sim, sw, pkt)
+        self.sim.net.forward_toward_host(self.sim, sw, pkt)
 
     def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
         pass
 
     # ---- host arrival hook --------------------------------------------------
     def on_host_packet(self, host: int, pkt: Packet) -> bool:
-        """Return True when the strategy consumed the packet. A consumed
-        linear (non-multicast) packet is recycled by the caller — do not
-        retain references to it past this call."""
+        """Return True when the strategy consumed the packet."""
         return False
 
 
@@ -302,20 +219,6 @@ class CanaryStrategy(AggregationStrategy):
     uses_retx_timers = True
     uses_switch_memory = True
 
-    def __init__(self, sim):
-        super().__init__(sim)
-        cfg = sim.cfg
-        sl = sim.switch
-        self._switch = sl
-        self._tables = sl.tables
-        self._slots = sl.slots
-        self._desc_high = sl.desc_high
-        self._live = sl.live_timers
-        self._timeout = cfg.timeout_ns
-        self._gc_ns = cfg.gc_ns
-        self._table_size = cfg.table_size
-        self._partition = cfg.partition_table and len(sim.jobs) > 1
-
     # ---- descriptor slot hashing -------------------------------------------
     @staticmethod
     def _hash64(pid: int) -> int:
@@ -326,6 +229,7 @@ class CanaryStrategy(AggregationStrategy):
 
     def slot_of(self, pid: int) -> int:
         sim = self.sim
+        cfg = sim.cfg
         region = sim.slot_regions.get(id_app(pid))
         if region is not None:
             # enforced tenant quota (fleet admission, §3.2.2): this app's
@@ -335,130 +239,107 @@ class CanaryStrategy(AggregationStrategy):
             # instead of stealing another tenant's slots.
             offset, size = region
             return offset + self._hash64(pid) % size
-        if self._partition:
+        if cfg.partition_table and len(sim.jobs) > 1:
             apps = len(sim.jobs)
-            region_sz = max(1, self._table_size // apps)
+            region_sz = max(1, cfg.table_size // apps)
             return (id_app(pid) % apps) * region_sz \
                 + self._hash64(pid) % region_sz
-        return self._hash64(pid) % self._table_size
+        return self._hash64(pid) % cfg.table_size
 
     # ---- dataplane ----------------------------------------------------------
     def on_switch_reduce(self, sw: int, in_port: int, pkt: Packet) -> None:
         sim = self.sim
         if pkt.bypass:
-            self._fwd_host(sim, sw, pkt)
+            sim.net.forward_toward_host(sim, sw, pkt)
             return
+        sl = sim.switch
+        cfg = sim.cfg
         pid = pkt.id
-        table = self._tables[sw]
+        table = sl.tables[sw]
         desc = table.get(pid)
-        now = self._engine.now
-        trace = self._trace
         if desc is not None:
             desc.children.add(in_port)
-            desc.last_ns = now
+            desc.last_ns = sim.now
             if desc.sent:
                 # straggler (§3.1.1): forward immediately, keep child recorded
                 sim.stragglers += 1
-                if trace is not None:
-                    trace.on_straggler(sw, in_port, pkt)
-                self._fwd_host(sim, sw, pkt)
+                if sim.trace is not None:
+                    sim.trace.on_straggler(sw, in_port, pkt)
+                sim.net.forward_toward_host(sim, sw, pkt)
             else:
                 desc.value += pkt.value
                 desc.counter += pkt.counter
-                if trace is not None:
-                    trace.on_switch_merge(sw, desc, in_port, pkt)
+                if sim.trace is not None:
+                    sim.trace.on_switch_merge(sw, desc, in_port, pkt)
                 if desc.counter >= desc.hosts - 1:
                     self._fire_descriptor(sw, desc)  # all data received (§3.1.4)
-                self._pool.free(pkt)  # merged: packet consumed
             return
-        if not sim.slot_regions and not self._partition:
-            slot = (((pid * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
-                    >> 24) % self._table_size
-        else:
-            slot = self.slot_of(pid)
-        slots = self._slots[sw]
-        occupant = slots.get(slot)
+        slot = self.slot_of(pid)
+        occupant = sl.slots[sw].get(slot)
         if occupant is not None:
             odesc = table.get(occupant)
             if odesc is None:
-                slots.pop(slot, None)
+                sl.slots[sw].pop(slot, None)
                 occupant = None
-            elif now - odesc.last_ns > self._gc_ns:
+            elif sim.now - odesc.last_ns > cfg.gc_ns:
                 # stale soft state (abandoned generation): garbage collect
-                self._switch.dealloc(sw, odesc)
+                sl.dealloc(sw, odesc)
                 occupant = None
         if occupant is not None:
             # collision (§3.2.1): stamp and bypass straight to the leader
             sim.collisions += 1
-            if trace is not None:
-                trace.on_collision(sw, in_port, pkt)
+            if sim.trace is not None:
+                sim.trace.on_collision(sw, in_port, pkt)
             pkt.switch_addr = sw
             pkt.port_stamp = in_port
             pkt.bypass = True
-            self._fwd_host(sim, sw, pkt)
+            sim.net.forward_toward_host(sim, sw, pkt)
             return
         desc = Descriptor(id=pid, slot=slot, value=pkt.value,
                           counter=pkt.counter, hosts=pkt.hosts,
-                          children={in_port}, alloc_ns=now,
-                          last_ns=now)
+                          children={in_port}, alloc_ns=sim.now,
+                          last_ns=sim.now)
         table[pid] = desc
-        slots[slot] = pid
-        dh = self._desc_high
-        n = len(table)
-        if n > dh[sw]:
-            dh[sw] = n
-        if trace is not None:
-            trace.on_desc_alloc(sw, desc, in_port, pkt)
+        sl.slots[sw][slot] = pid
+        sl.note_high_water(sw)
+        if sim.trace is not None:
+            sim.trace.on_desc_alloc(sw, desc, in_port, pkt)
         if desc.counter >= desc.hosts - 1:
             self._fire_descriptor(sw, desc)
-            self._pool.free(pkt)
             return
-        sl = self._switch
-        sl.timer_seq = tseq = sl.timer_seq + 1
-        desc.timer_seq = tseq
-        self._live[tseq] = desc
-        self._push_timer(now + self._timeout, EV_TIMER, sw, tseq, pid)
-        self._pool.free(pkt)
+        sl.timer_seq += 1
+        desc.timer_seq = sl.timer_seq
+        sim.engine.push(sim.now + cfg.timeout_ns, EV_TIMER, sw, sl.timer_seq,
+                        pid)
 
     def _fire_descriptor(self, sw: int, desc: Descriptor,
                          reason: str = "complete") -> None:
         """Timeout (or early completion): forward the partial aggregate (§3.1.1)."""
         sim = self.sim
         desc.sent = True
-        if desc.timer_seq:
-            # early completion: lazily cancel the armed timer (the heap
-            # entry stays; its pop misses live_timers and is dropped)
-            self._live.pop(desc.timer_seq, None)
-        did = desc.id
-        leader = sim.leader_of(did >> APP_SHIFT, (did >> GEN_BITS) & BLOCK_MASK)
-        out = self._pool.alloc()
-        out.kind = PacketKind.REDUCE
-        out.dest = leader
-        out.id = did
-        out.counter = desc.counter
-        out.hosts = desc.hosts
-        out.value = desc.value
-        out.size_bytes = self._mtu
-        if self._trace is not None:
-            self._trace.on_desc_flush(sw, desc, out, reason)
-        self._fwd_host(sim, sw, out)
+        leader = sim.leader_of(id_app(desc.id), id_block(desc.id))
+        out = Packet(kind=PacketKind.REDUCE, dest=leader, id=desc.id,
+                     counter=desc.counter, hosts=desc.hosts, value=desc.value,
+                     size_bytes=sim.cfg.mtu_bytes)
+        if sim.trace is not None:
+            sim.trace.on_desc_flush(sw, desc, out, reason)
+        sim.net.forward_toward_host(sim, sw, out)
 
     def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
         self._fire_descriptor(sw, desc, reason="timeout")
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
         sim = self.sim
-        desc = self._tables[sw].get(pkt.id)
+        desc = sim.switch.tables[sw].get(pkt.id)
         if desc is None:
             # collision happened here during reduce: drop; the leader's
             # restoration packet re-attaches this subtree (§3.2.1)
             return
-        if self._trace is not None:
-            self._trace.on_bcast_fanout(sw, pkt, desc.children)
-        out_port_send = sim.net.out_port_send
+        if sim.trace is not None:
+            sim.trace.on_bcast_fanout(sw, pkt, desc.children)
         for port in desc.children:
-            out_port_send(sim, sw, port, pkt)
-        self._switch.dealloc(sw, desc)
+            sim.net.out_port_send(sim, sw, port, pkt)
+        sim.switch.dealloc(sw, desc)
 
 
 @register_algorithm(Algo.STATIC_TREE)
@@ -473,8 +354,6 @@ class StaticTreeStrategy(AggregationStrategy):
 
     def __init__(self, sim):
         super().__init__(sim)
-        self._tables = sim.switch.tables
-        self._desc_high = sim.switch.desc_high
         self.roots: Dict[int, List[int]] = {}          # app -> tree roots
         self.plans: Dict[tuple, Dict[int, int]] = {}   # (app, root) -> plan
 
@@ -498,76 +377,59 @@ class StaticTreeStrategy(AggregationStrategy):
         if pkt.bypass:
             # admission-degraded app (host-based fallback): never part of the
             # static plan — forward straight toward the leader host
-            self._fwd_host(sim, sw, pkt)
+            sim.net.forward_toward_host(sim, sw, pkt)
             return
-        pid = pkt.id
-        app = pid >> APP_SHIFT
-        roots = self.roots[app]
-        root = roots[((pid >> GEN_BITS) & BLOCK_MASK) % len(roots)]
-        table = self._tables[sw]
-        desc = table.get(pid)
-        now = self._engine.now
+        sl = sim.switch
+        app = id_app(pkt.id)
+        root = self.root_of(app, id_block(pkt.id))
+        table = sl.tables[sw]
+        desc = table.get(pkt.id)
         if desc is None:
             expected = self.plans[(app, root)][sw]
-            desc = Descriptor(id=pid, slot=-1, hosts=pkt.hosts,
-                              expected=expected, alloc_ns=now,
-                              last_ns=now)
-            table[pid] = desc
-            dh = self._desc_high
-            n = len(table)
-            if n > dh[sw]:
-                dh[sw] = n
+            desc = Descriptor(id=pkt.id, slot=-1, hosts=pkt.hosts,
+                              expected=expected, alloc_ns=sim.now,
+                              last_ns=sim.now)
+            table[pkt.id] = desc
+            sl.note_high_water(sw)
         desc.children.add(in_port)
         desc.value += pkt.value
         desc.counter += pkt.counter
-        desc.last_ns = now
-        trace = self._trace
-        if trace is not None:
-            trace.on_switch_merge(sw, desc, in_port, pkt)
+        desc.last_ns = sim.now
+        if sim.trace is not None:
+            sim.trace.on_switch_merge(sw, desc, in_port, pkt)
         if len(desc.children) < desc.expected:
-            self._pool.free(pkt)
             return
         if sw != root:
-            out = self._pool.alloc()
-            out.kind = PacketKind.REDUCE
-            out.dest = -1
-            out.id = pid
-            out.counter = desc.counter
-            out.hosts = pkt.hosts
-            out.value = desc.value
-            out.size_bytes = self._mtu
-            if trace is not None:
-                trace.on_desc_flush(sw, desc, out, "complete")
+            out = Packet(kind=PacketKind.REDUCE, dest=-1, id=pkt.id,
+                         counter=desc.counter, hosts=pkt.hosts,
+                         value=desc.value, size_bytes=sim.cfg.mtu_bytes)
+            if sim.trace is not None:
+                sim.trace.on_desc_flush(sw, desc, out, "complete")
             sim.net.static_send_up(sim, sw, root, out)
             desc.sent = True
         else:
-            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pid,
+            bc = Packet(kind=PacketKind.BCAST, dest=-1, id=pkt.id,
                         value=desc.value, multicast=True,
-                        size_bytes=self._mtu)
-            if trace is not None:
-                trace.on_static_root_done(sw, desc)
-                trace.on_bcast_fanout(sw, bc, desc.children)
-            out_port_send = sim.net.out_port_send
+                        size_bytes=sim.cfg.mtu_bytes)
+            if sim.trace is not None:
+                sim.trace.on_static_root_done(sw, desc)
+                sim.trace.on_bcast_fanout(sw, bc, desc.children)
             for port in desc.children:
-                out_port_send(sim, sw, port, bc)
-            table.pop(pid, None)
-        self._pool.free(pkt)
+                sim.net.out_port_send(sim, sw, port, bc)
+            table.pop(pkt.id, None)
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:
         sim = self.sim
-        table = self._tables[sw]
+        table = sim.switch.tables[sw]
         desc = table.get(pkt.id)
         if desc is None:
             return
-        net = sim.net
-        if self._trace is not None:
-            self._trace.on_bcast_fanout(
+        if sim.trace is not None:
+            sim.trace.on_bcast_fanout(
                 sw, pkt,
-                [p for p in desc.children if not net.is_up_port(sw, p)])
-        out_port_send = net.out_port_send
-        is_up_port = net.is_up_port
+                [p for p in desc.children if not sim.net.is_up_port(sw, p)])
         for port in desc.children:
-            if is_up_port(sw, port):
+            if sim.net.is_up_port(sw, port):
                 continue  # never broadcast back up the tree
-            out_port_send(sim, sw, port, pkt)
+            sim.net.out_port_send(sim, sw, port, pkt)
         table.pop(pkt.id, None)

@@ -24,11 +24,8 @@ host-protocol changes needed.
 """
 from __future__ import annotations
 
-from collections import deque
-from heapq import heappush as _heappush
 from typing import Dict, List, Optional, Type
 
-from .engine import EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH
 from .types import Packet, PacketKind, SimConfig
 
 
@@ -40,17 +37,10 @@ class Link:
     gives exact serialization + queueing delay for FIFO ports without per-byte
     events, and is what the adaptive load-balancing policy (§5.2: "up port
     with the smallest number of enqueued bytes") inspects.
-
-    ``inflight`` is the staged-arrival FIFO (ARCHITECTURE.md §Performance):
-    ``(arrival_t, seq, packet)`` entries in transmit order. Only the head has
-    an event in the engine heap (kind ``EV_LINK_ARRIVE_*``, ``c`` = this
-    link); the engine re-arms the next head when it pops. Per-link arrivals
-    are monotone in ``(t, seq)``, so staging changes where an entry *waits*,
-    never its dispatch order — the golden replays pin this.
     """
 
     __slots__ = ("busy_until", "bytes_sent", "bytes_per_ns", "latency_ns",
-                 "capacity", "inflight")
+                 "capacity")
 
     def __init__(self, bytes_per_ns: float, latency_ns: float, capacity: int):
         self.busy_until = 0.0
@@ -58,7 +48,6 @@ class Link:
         self.bytes_per_ns = bytes_per_ns
         self.latency_ns = latency_ns
         self.capacity = capacity
-        self.inflight = deque()
 
     def backlog_bytes(self, now: float) -> float:
         b = (self.busy_until - now) * self.bytes_per_ns
@@ -79,11 +68,9 @@ class Topology:
     """Routing/fabric protocol the simulator layers program against.
 
     ``sim`` in every signature is the :class:`~.simulator.Simulator` facade;
-    topologies use only its ``engine`` (clock + ``push`` scheduler), its
-    ``rng``/``cfg`` state, the drop state (``_drop_prob``/``_rng_random``,
-    the inlined form of ``maybe_drop()``), the packet ``pool`` and its
-    ``dropped`` counter. Stubs driving a topology directly (tests) must
-    provide those attributes.
+    topologies use only its ``now``/``rng``/``cfg`` state, ``maybe_drop()``
+    and the ``arrive_switch``/``arrive_host`` event schedulers, plus its
+    ``dropped`` counter.
     """
 
     name: str = ""
@@ -93,18 +80,6 @@ class Topology:
     L: int                 # number of leaf (host-facing) switches
     num_switches: int
     num_hosts: int
-
-    # Pre-resolved hot-path binding (None until :meth:`bind`): topologies
-    # built standalone (tests, shape checks) stay usable for routing/shape
-    # queries; driving ``tx_*`` requires a bound facade (or stub).
-    _pool_free = None
-
-    def bind(self, sim) -> None:
-        """Pre-resolve per-run callables (ARCHITECTURE.md §Performance).
-        Called once by the :class:`~.simulator.Simulator` facade after all
-        layers exist. Subclasses extend this to bind their own hot-path
-        state (the engine for inline pushes, the RNG draw)."""
-        self._pool_free = sim.pool.free
 
     @classmethod
     def config_num_switches(cls, cfg: SimConfig) -> int:
@@ -147,48 +122,23 @@ class Topology:
     # Every link send follows the same sequence: serialize on the link (bytes
     # count even for packets dropped in flight), roll the iid drop, schedule
     # the arrival. Topologies must route through these two helpers so drop
-    # semantics can never diverge between fabrics. A packet dropped in flight
-    # is at end-of-life: linear (non-multicast) ones go back to the pool.
+    # semantics can never diverge between fabrics.
     def tx_to_switch(self, sim, link: Link, pkt: Packet, sw: int,
                      port: int) -> float:
-        eng = sim.engine
-        now = eng.now
-        start = link.busy_until if link.busy_until > now else now
-        link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
-        link.bytes_sent += pkt.size_bytes
-        if sim._drop_prob and sim._rng_random() < sim._drop_prob:
+        arrival = link.transmit(sim.now, pkt.size_bytes)
+        if sim.maybe_drop():
             sim.dropped += 1
-            if not pkt.multicast:
-                sim.pool.free(pkt)
         else:
-            eng._seq = seq = eng._seq + 1
-            arrival = busy + link.latency_ns
-            q = link.inflight
-            q.append((arrival, seq, pkt))
-            if len(q) == 1:
-                _heappush(eng.heap, (arrival, seq, EV_LINK_ARRIVE_SWITCH,
-                                     sw, port, link))
-        return busy
+            sim.arrive_switch(arrival, sw, port, pkt)
+        return link.busy_until
 
     def tx_to_host(self, sim, link: Link, pkt: Packet, host: int) -> float:
-        eng = sim.engine
-        now = eng.now
-        start = link.busy_until if link.busy_until > now else now
-        link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
-        link.bytes_sent += pkt.size_bytes
-        if sim._drop_prob and sim._rng_random() < sim._drop_prob:
+        arrival = link.transmit(sim.now, pkt.size_bytes)
+        if sim.maybe_drop():
             sim.dropped += 1
-            if not pkt.multicast:
-                sim.pool.free(pkt)
         else:
-            eng._seq = seq = eng._seq + 1
-            arrival = busy + link.latency_ns
-            q = link.inflight
-            q.append((arrival, seq, pkt))
-            if len(q) == 1:
-                _heappush(eng.heap, (arrival, seq, EV_LINK_ARRIVE_HOST,
-                                     host, 0, link))
-        return busy
+            sim.arrive_host(arrival, host, pkt)
+        return link.busy_until
 
     # --- data movement -----------------------------------------------------
     def send_from_host(self, sim, host: int, pkt: Packet) -> float:
@@ -265,43 +215,23 @@ def pick_min_backlog(links: List[Link], default: int, now: float,
     candidate, ties broken toward the default for determinism. When ``remote``
     is given (one known downstream link per candidate), its backlog joins the
     metric — the CONGA-style path-congestion measure (§2.1).
-
-    Hot path: the metric is computed inline (no per-call closure) and the
-    arithmetic is kept bit-identical to ``Link.backlog_bytes`` — backlog is
-    ``max(0, busy_until - now) * bytes_per_ns`` per leg, clamped *per link*
-    before summing, so the golden replays cannot drift.
     """
+
+    def metric(i: int) -> float:
+        b = links[i].backlog_bytes(now)
+        if remote is not None:
+            b += remote[i].backlog_bytes(now)
+        return b
+
     if policy == "ecmp":
         return default
-    link = links[default]
-    b = (link.busy_until - now) * link.bytes_per_ns
-    best_b = b if b > 0.0 else 0.0
-    if remote is not None:
-        rl = remote[default]
-        b = (rl.busy_until - now) * rl.bytes_per_ns
-        if b > 0.0:
-            best_b += b
-    if policy == "adaptive" and best_b <= threshold_bytes:
+    if policy == "adaptive" and metric(default) <= threshold_bytes:
         return default
-    best = default
-    if remote is None:
-        for i, link in enumerate(links):
-            b = (link.busy_until - now) * link.bytes_per_ns
-            if b < 0.0:
-                b = 0.0
-            if b < best_b - 1e-9:
-                best, best_b = i, b
-    else:
-        for i, link in enumerate(links):
-            b = (link.busy_until - now) * link.bytes_per_ns
-            if b < 0.0:
-                b = 0.0
-            rl = remote[i]
-            rb = (rl.busy_until - now) * rl.bytes_per_ns
-            if rb > 0.0:
-                b += rb
-            if b < best_b - 1e-9:
-                best, best_b = i, b
+    best, best_b = default, metric(default)
+    for i in range(len(links)):
+        b = metric(i)
+        if b < best_b - 1e-9:
+            best, best_b = i, b
     return best
 
 
@@ -357,12 +287,6 @@ class ThreeTierFatTree(Topology):
         self.agg_down = [[mk() for _ in range(self.C)]
                          for _ in range(self.num_aggs)]
         self.flowlets: dict = {}
-        # hot-path LB state, resolved once (ARCHITECTURE.md §Performance)
-        self._lb = str(cfg.lb)
-        self._noise_lb = str(cfg.noise_lb)
-        self._thr = cfg.lb_threshold * cfg.buffer_bytes
-        self._flowlet = cfg.flowlet_lb
-        self._path_aware = cfg.path_aware_lb
 
     # ---- identity ----------------------------------------------------------
     @classmethod
@@ -428,7 +352,8 @@ class ThreeTierFatTree(Topology):
 
     # ---- LB decisions ------------------------------------------------------
     def _policy_for(self, pkt: Packet) -> str:
-        return self._noise_lb if pkt.kind == PacketKind.NOISE else self._lb
+        cfg = self.cfg
+        return str(cfg.noise_lb) if pkt.kind == PacketKind.NOISE else str(cfg.lb)
 
     def _pick(self, sim, sw: int, links: List[Link], default: int,
               pkt: Packet, remote: Optional[List[Link]] = None) -> int:
@@ -436,20 +361,19 @@ class ThreeTierFatTree(Topology):
         point-to-point traffic when ``cfg.flowlet_lb``). ``remote`` carries
         the known downstream leg per candidate for CONGA-style path metrics
         (only passed when ``cfg.path_aware_lb``)."""
-        kind = pkt.kind
-        policy = self._noise_lb if kind == PacketKind.NOISE else self._lb
-        if self._flowlet and (kind == PacketKind.NOISE
-                              or kind == PacketKind.RING):
+        cfg = self.cfg
+        policy = self._policy_for(pkt)
+        thr = cfg.lb_threshold * cfg.buffer_bytes
+        if cfg.flowlet_lb and pkt.kind in (PacketKind.NOISE, PacketKind.RING):
             fkey = (sw,) + self.flowlet_key(pkt)
             cached = self.flowlets.get(fkey)
             if cached is not None:
                 return cached
-            choice = pick_min_backlog(links, default, sim.engine.now, policy,
-                                      self._thr, remote)
+            choice = pick_min_backlog(links, default, sim.now, policy, thr,
+                                      remote)
             self.flowlets[fkey] = choice
             return choice
-        return pick_min_backlog(links, default, sim.engine.now, policy,
-                                self._thr, remote)
+        return pick_min_backlog(links, default, sim.now, policy, thr, remote)
 
     # ---- routing -----------------------------------------------------------
     def forward_toward_host(self, sim, sw: int, pkt: Packet) -> None:
@@ -465,7 +389,7 @@ class ThreeTierFatTree(Topology):
             # the agg->dest-leaf down leg is known per candidate agg; for
             # cross-pod traffic the remaining legs depend on later hops
             remote = [self.leaf_down[dleaf][a] for a in range(self.A)] \
-                if self._path_aware and \
+                if self.cfg.path_aware_lb and \
                 self.pod_of_leaf(dleaf) == self.pod_of_leaf(sw) else None
             a = self._pick(sim, sw, self.leaf_up[sw], fh % self.A, pkt,
                            remote)
@@ -482,7 +406,7 @@ class ThreeTierFatTree(Topology):
                 # leg per candidate core is known here: measure it (§2.1)
                 dagg = self.pod_of_leaf(dleaf) * self.A + fh % self.A
                 remote = [self.agg_down[dagg][c] for c in range(self.C)] \
-                    if self._path_aware else None
+                    if self.cfg.path_aware_lb else None
                 c = self._pick(sim, sw, self.agg_up[agg_l], fh % self.C, pkt,
                                remote)
                 self._send_agg_to_core(sim, agg_l, c, pkt)

@@ -91,68 +91,6 @@ class Packet:
     trace_node: int = -1
 
 
-class PacketPool:
-    """Free-list allocator for :class:`Packet` (ARCHITECTURE.md §Performance).
-
-    The per-event hot path allocates one ``Packet`` per send; recycling them
-    through an explicit free list cuts allocator/GC churn without touching
-    simulation semantics. The invariants that keep reuse safe (pinned by the
-    golden replays and ``tests/core/test_perf_contract.py``):
-
-    * **Only linear packets are ever freed.** A packet is *linear* when
-      exactly one reference exists at any time (REDUCE/NOISE/RING/RESTORE/
-      FAIL/UNICAST_DATA/RETX_REQ). Multicast packets (``multicast=True`` —
-      broadcast fan-outs schedule the *same object* on several links) must
-      never be freed; every free site guards on ``pkt.multicast`` (or frees
-      a kind that is never multicast, which also keeps the pooled
-      ``multicast`` flag invariantly False).
-    * **``free`` resets exactly the fields whose stale values could be
-      *read through a guard* on the next life**: ``bypass`` (a stale True
-      would route an aggregable REDUCE around every switch), ``switch_addr``
-      / ``port_stamp`` (a stale stamp would fabricate §3.2.1 restorations at
-      the leader) and ``trace_node`` (the recorder lazily trusts any id
-      >= 0). Every other field is only ever read for packet kinds whose
-      alloc sites assign it: ``alloc`` sites must set ``kind``, ``dest``,
-      ``id``, ``size_bytes`` plus every field their kind's consumers read
-      (REDUCE: counter/hosts/value [+src at host sends]; NOISE: src/chunk;
-      RING: value/src/chunk/step). RESTORE's ``restore_ports``/
-      ``dest_switch`` are exempt because RESTORE packets are always
-      constructed fresh, never pool-allocated.
-    """
-
-    __slots__ = ("_free", "allocated", "reused", "freed", "max_free")
-
-    def __init__(self, max_free: int = 8192) -> None:
-        self._free: List["Packet"] = []
-        self.allocated = 0   # fresh Packet constructions
-        self.reused = 0      # allocs served from the free list
-        self.freed = 0       # packets returned to the pool
-        self.max_free = max_free
-
-    def alloc(self) -> "Packet":
-        free = self._free
-        if free:
-            self.reused += 1
-            return free.pop()
-        self.allocated += 1
-        return Packet(kind=PacketKind.REDUCE, dest=-1, id=0)
-
-    def free(self, pkt: "Packet") -> None:
-        free = self._free
-        if len(free) < self.max_free:
-            # minimal reset — see the class docstring for the field audit
-            pkt.bypass = False
-            pkt.switch_addr = -1
-            pkt.port_stamp = -1
-            pkt.trace_node = -1
-            self.freed += 1
-            free.append(pkt)
-
-    # NOTE: ``freed`` can exceed ``allocated + reused`` — packets born via
-    # the plain ``Packet(...)`` constructor (control traffic: FAIL, RESTORE,
-    # UNICAST_DATA, RETX_REQ) are recycled into the pool at end-of-life too.
-
-
 # --- Block id packing -------------------------------------------------------
 # id = (app << APP_SHIFT) | (block << GEN_BITS) | generation
 # A retransmitted block gets a fresh generation so that it hashes to (likely)
@@ -160,7 +98,6 @@ class PacketPool:
 # ("the hosts re-issue the reduction of that packet with a different id").
 GEN_BITS = 6
 APP_SHIFT = 40
-BLOCK_MASK = (1 << (APP_SHIFT - GEN_BITS)) - 1
 
 
 def make_id(app: int, block: int, generation: int = 0) -> int:
@@ -172,7 +109,7 @@ def id_app(pid: int) -> int:
 
 
 def id_block(pid: int) -> int:
-    return (pid >> GEN_BITS) & BLOCK_MASK
+    return (pid >> GEN_BITS) & ((1 << (APP_SHIFT - GEN_BITS)) - 1)
 
 
 def id_gen(pid: int) -> int:

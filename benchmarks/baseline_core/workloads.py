@@ -1,0 +1,67 @@
+"""Workload layer: background congestion traffic and sender-side noise.
+
+The paper's evaluation (§5.2) surrounds the allreduce with two disturbance
+models, both of which live here rather than in the host protocol:
+
+* **Random-uniform congestion** — every non-participant "noise host" streams
+  ``noise_msg_bytes``-sized messages to uniformly re-drawn noise-host peers.
+  The background jobs and the allreduce are distinct applications: noise
+  flows target noise hosts, sharing the fabric (leaf/spine links) with the
+  allreduce but not the participants' NICs.
+* **Sender OS noise (§5.2.5)** — with probability ``noise_prob`` a host's
+  next send is delayed by ``noise_delay_ns``, emulating jittery sender
+  stacks.
+
+Both consume the simulator's single RNG stream, so runs stay reproducible.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .types import Packet, PacketKind
+
+
+class CongestionWorkload:
+    """Background-traffic generation + sender-noise decisions."""
+
+    def __init__(self, sim, noise_hosts: Optional[List[int]]):
+        self.sim = sim
+        self.noise_hosts = list(noise_hosts or [])
+        self._noise_set = set(self.noise_hosts)
+
+    def start(self) -> None:
+        """Kick every noise host's pump at t=0 (after job setup)."""
+        for h in self.noise_hosts:
+            self.sim.hostproto.schedule_pump(h, 0.0)
+
+    def next_noise_packet(self, host: int, hs) -> Optional[Packet]:
+        """The next background-traffic packet for ``host`` (None when the
+        host is not a noise host). ``hs`` is the host's ``_HostState``, which
+        carries the current message's peer/remaining-bytes cursor."""
+        if host not in self._noise_set:
+            return None
+        if len(self.noise_hosts) < 2:
+            return None  # a lone noise host has no peer to stream to
+        sim = self.sim
+        cfg = sim.cfg
+        if hs.noise_remaining <= 0:
+            # random-uniform pattern *among the congestion hosts* (§5.2)
+            peer = self.noise_hosts[sim.rng.randrange(len(self.noise_hosts))]
+            while peer == host:
+                peer = self.noise_hosts[
+                    sim.rng.randrange(len(self.noise_hosts))]
+            hs.noise_peer = peer
+            hs.noise_remaining = cfg.noise_msg_bytes
+            hs.noise_msg_idx += 1
+        take = min(cfg.payload_bytes, hs.noise_remaining)
+        hs.noise_remaining -= take
+        return Packet(kind=PacketKind.NOISE, dest=hs.noise_peer, id=0,
+                      size_bytes=take + cfg.header_bytes, src=host,
+                      chunk=hs.noise_msg_idx)
+
+    def sender_delay_ns(self, host: int) -> Optional[float]:
+        """§5.2.5 sender-side OS noise: delay the pending send or not."""
+        cfg = self.sim.cfg
+        if cfg.noise_prob > 0.0 and self.sim.rng.random() < cfg.noise_prob:
+            return cfg.noise_delay_ns
+        return None

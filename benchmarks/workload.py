@@ -45,16 +45,13 @@ def _scenario_cells() -> List[dict]:
         algos = ALGOS
         congestion_levels = (False, True)
         overrides = {}
-        # the host-based ring on a congested three_tier is ~100x slower to
-        # *simulate* (3.7 ms of simulated time vs 270 us for CANARY) — ring
-        # cells run on fat_tree only; not a silent cap:
-        emit("workload/note/ring_three_tier_skipped", 0.0,
-             "ring cells run on fat_tree only (see benchmarks/workload.py)")
+        # ring-on-three_tier cells are back at full scale: the host-based
+        # ring under 3-tier congestion simulates ~100x more traffic-time
+        # than CANARY, but the hot-path overhaul (benchmarks/perf.py) made
+        # full-scale cells affordable; each cell's wall_us lands in the JSON.
     cells = []
     for name in names:
         for algo, nt, label in algos:
-            if label == "ring" and name.endswith("/three_tier"):
-                continue
             for cong in congestion_levels:
                 (p, us) = timed(predict_scenario, name, algo=algo,
                                 n_trees=nt, congestion=cong, **overrides)

@@ -25,12 +25,19 @@ Port numbering (matches the children-bitmap semantics of §4.2)
 from __future__ import annotations
 
 import random
+from heapq import heappush as _heappush
 from typing import Dict, List, Optional
 
+from .engine import EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH
 from .topology import Link, Topology, pick_min_backlog, register_topology
 from .types import Packet, PacketKind, SimConfig
 
 __all__ = ["FatTree", "Link"]
+
+_K_NOISE = int(PacketKind.NOISE)
+_K_RING = int(PacketKind.RING)
+_EV_SW = EV_LINK_ARRIVE_SWITCH  # staged-arrival kinds used by the inline tx
+_EV_HOST = EV_LINK_ARRIVE_HOST
 
 
 @register_topology("fat_tree")
@@ -58,6 +65,30 @@ class FatTree(Topology):
         self.leaf_down = [[mk() for _ in range(self.S)] for _ in range(self.L)]
         # flowlet tables: (leaf, flow key) -> committed spine [37]
         self.flowlets: dict = {}
+        # hot-path LB/routing state, resolved once per fabric build
+        # (ARCHITECTURE.md §Performance): policy strings, the adaptive
+        # threshold in bytes, and per-host leaf/port maps as flat tuples.
+        self._lb = str(cfg.lb)
+        self._noise_lb = str(cfg.noise_lb)
+        self._thr = cfg.lb_threshold * cfg.buffer_bytes
+        self._flowlet = cfg.flowlet_lb
+        self._path_aware = cfg.path_aware_lb
+        self._dp = cfg.drop_prob
+        # policy fast-path codes: 0 = ecmp (hash default, no metric),
+        # 1 = adaptive (default while under threshold), 2 = full scan
+        _codes = {"ecmp": 0, "adaptive": 1}
+        self._lb_code = _codes.get(self._lb, 2)
+        self._noise_code = _codes.get(self._noise_lb, 2)
+        self._host_leaf = tuple(h // self.H for h in range(cfg.num_hosts))
+        # bound in bind() (facade wiring): the engine (for inline event
+        # pushes), its RNG draw, and the packet pool
+        self._engine = None
+        self._rngr = None
+
+    def bind(self, sim) -> None:
+        super().bind(sim)
+        self._engine = sim.engine
+        self._rngr = sim.rng.random
 
     # ---- helpers -----------------------------------------------------------
     @classmethod
@@ -101,34 +132,47 @@ class FatTree(Topology):
         the shared :func:`~.topology.pick_min_backlog`, so the two fabrics
         can never drift apart.
         """
-        cfg = self.cfg
         default = flow_hash % self.S
-        lb = policy if policy is not None else cfg.lb
+        lb = str(policy) if policy is not None else self._lb
         remote = self.leaf_down[dest_leaf] \
-            if cfg.path_aware_lb and dest_leaf >= 0 and dest_leaf != leaf \
+            if self._path_aware and dest_leaf >= 0 and dest_leaf != leaf \
             else None
-        return pick_min_backlog(self.leaf_up[leaf], default, now, str(lb),
-                                cfg.lb_threshold * cfg.buffer_bytes, remote)
+        return pick_min_backlog(self.leaf_up[leaf], default, now, lb,
+                                self._thr, remote)
 
-    def pick_spine_flowlet(self, leaf: int, now: float, flow_hash: int,
-                           flow_key: object, rng=None,
-                           dest_leaf: int = -1,
-                           policy: Optional[str] = None) -> int:
-        """Flowlet-sticky variant: decide once per flow key, then stick [37]."""
-        key = (leaf, flow_key)
-        cached = self.flowlets.get(key)
-        if cached is not None:
-            return cached
-        spine = self.pick_spine(leaf, now, flow_hash, rng, dest_leaf=dest_leaf,
-                                policy=policy)
-        self.flowlets[key] = spine
-        return spine
+    # NOTE: flowlet-sticky decisions live inline in forward_toward_host (the
+    # only consumer), keyed by the flat (leaf, kind, src, dest, chunk/step)
+    # shape — any second entry point must share that key shape or the same
+    # flowlet could commit to two different spines.
 
-    # ---- transmit (drop checks & byte accounting live in Topology.tx_*) ----
+    # ---- transmit ----------------------------------------------------------
+    # The hot sends below deliberately replicate the Topology.tx_to_switch /
+    # tx_to_host sequence inline (serialize -> iid drop -> schedule arrival,
+    # dropped linear packets recycled) with the engine pre-bound — this is
+    # the innermost packet loop of the whole repo. The canonical semantics
+    # live in Topology.tx_*; the golden replays pin the equivalence.
     def send_from_host(self, sim, host: int, pkt: Packet) -> float:
-        return self.tx_to_switch(sim, self.host_up[host], pkt,
-                                 self.leaf_of(host),
-                                 self.leaf_port_of_host(host))
+        link = self.host_up[host]
+        eng = self._engine
+        now = eng.now
+        bu = link.busy_until
+        start = bu if bu > now else now
+        link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
+        link.bytes_sent += pkt.size_bytes
+        if self._dp and self._rngr() < self._dp:
+            sim.dropped += 1
+            if not pkt.multicast:
+                self._pool_free(pkt)
+        else:
+            eng._seq = seq = eng._seq + 1
+            arrival = busy + link.latency_ns
+            q = link.inflight
+            q.append((arrival, seq, pkt))
+            if len(q) == 1:
+                _heappush(eng.heap, (arrival, seq, _EV_SW,
+                                     self._host_leaf[host], host % self.H,
+                                     link))
+        return busy
 
     def _send_leaf_up(self, sim, leaf: int, spine: int, pkt: Packet) -> None:
         self.tx_to_switch(sim, self.leaf_up[leaf][spine], pkt, self.L + spine,
@@ -143,38 +187,128 @@ class FatTree(Topology):
 
     # ---- routing -----------------------------------------------------------
     def forward_toward_host(self, sim, sw: int, pkt: Packet) -> None:
-        if self.is_leaf(sw):
-            if self.leaf_of(pkt.dest) == sw:
-                self._send_leaf_to_host(sim, pkt.dest, pkt)
+        dest = pkt.dest
+        H = self.H
+        dleaf = dest // H
+        eng = self._engine
+        size = pkt.size_bytes
+        if sw >= self.L:                         # spine: one hop down
+            link = self.leaf_down[dleaf][sw - self.L]
+            now = eng.now
+            bu = link.busy_until
+            start = bu if bu > now else now
+            link.busy_until = busy = start + size / link.bytes_per_ns
+            link.bytes_sent += size
+            if self._dp and self._rngr() < self._dp:
+                sim.dropped += 1
+                if not pkt.multicast:
+                    self._pool_free(pkt)
             else:
-                # Default up-port: Topology.flow_hash — same-block partials
-                # converge on one spine, blocks spread, retransmitted
-                # generations re-route (§3.1.3/§3.3).
-                kind = pkt.kind
-                dleaf = self.leaf_of(pkt.dest)
-                fh = self.flow_hash(pkt)
-                # background congestion traffic rides its own policy (§2.1)
-                policy = str(self.cfg.noise_lb) if kind == PacketKind.NOISE \
-                    else None
-                if self.cfg.flowlet_lb and kind in (PacketKind.NOISE,
-                                                    PacketKind.RING):
-                    # point-to-point traffic moves at flowlet granularity [37]
-                    spine = self.pick_spine_flowlet(sw, sim.now, fh,
-                                                    self.flowlet_key(pkt),
-                                                    sim.rng, dest_leaf=dleaf,
-                                                    policy=policy)
-                else:
-                    # NOTE: the seed monolith dropped ``policy`` here, so
-                    # with flowlet_lb=False background noise silently rode
-                    # cfg.lb instead of cfg.noise_lb. Passing it is an
-                    # intentional (non-golden-covered) behaviour fix that
-                    # keeps noise_lb semantics identical across fabrics.
-                    spine = self.pick_spine(sw, sim.now, fh, sim.rng,
-                                            dest_leaf=dleaf, policy=policy)
-                self._send_leaf_up(sim, sw, spine, pkt)
+                eng._seq = seq = eng._seq + 1
+                arrival = busy + link.latency_ns
+                q = link.inflight
+                q.append((arrival, seq, pkt))
+                if len(q) == 1:
+                    _heappush(eng.heap, (arrival, seq, _EV_SW, dleaf,
+                                         H + sw - self.L, link))
+            return
+        if dleaf == sw:                          # leaf: deliver to the host
+            link = self.host_down[dest]
+            now = eng.now
+            bu = link.busy_until
+            start = bu if bu > now else now
+            link.busy_until = busy = start + size / link.bytes_per_ns
+            link.bytes_sent += size
+            if self._dp and self._rngr() < self._dp:
+                sim.dropped += 1
+                if not pkt.multicast:
+                    self._pool_free(pkt)
+            else:
+                eng._seq = seq = eng._seq + 1
+                arrival = busy + link.latency_ns
+                q = link.inflight
+                q.append((arrival, seq, pkt))
+                if len(q) == 1:
+                    _heappush(eng.heap, (arrival, seq, _EV_HOST, dest, 0,
+                                         link))
+            return
+        # Default up-port: Topology.flow_hash — same-block partials converge
+        # on one spine, blocks spread, retransmitted generations re-route
+        # (§3.1.3/§3.3). Background congestion rides its own policy (§2.1);
+        # with flowlet_lb the seed monolith dropped that policy — passing it
+        # is an intentional (non-golden-covered) behaviour fix that keeps
+        # noise_lb semantics identical across fabrics.
+        kind = pkt.kind
+        if kind == _K_NOISE:
+            fh = hash(dest)
+            policy = self._noise_lb
+            code = self._noise_code
+        elif kind == _K_RING:
+            fh = hash((dest, pkt.step))
+            policy = self._lb
+            code = self._lb_code
         else:
-            self._send_spine_down(sim, self.spine_index(sw),
-                                  self.leaf_of(pkt.dest), pkt)
+            fh = hash((dest, pkt.id))
+            policy = self._lb
+            code = self._lb_code
+        if self._flowlet and (kind == _K_NOISE or kind == _K_RING):
+            # point-to-point traffic moves at flowlet granularity [37].
+            # Flat inline form of (sw, flowlet_key(pkt)) — this fabric's
+            # flowlet cache is only ever keyed here, so the shape is private.
+            key = (sw, kind, pkt.src, dest,
+                   pkt.chunk if kind == _K_NOISE else pkt.step)
+            spine = self.flowlets.get(key)
+            if spine is None:
+                remote = self.leaf_down[dleaf] \
+                    if self._path_aware and dleaf >= 0 else None
+                spine = pick_min_backlog(self.leaf_up[sw], fh % self.S,
+                                         eng.now, policy, self._thr, remote)
+                self.flowlets[key] = spine
+        elif code == 0:  # ecmp: the hash default, no metric
+            spine = fh % self.S
+        else:
+            # inline the pick_min_backlog fast path: adaptive stays on the
+            # default while its (per-leg clamped) path backlog is under the
+            # threshold; anything else falls through to the full scan
+            spine = -1
+            links = self.leaf_up[sw]
+            default = fh % self.S
+            now = eng.now
+            remote = self.leaf_down[dleaf] \
+                if self._path_aware and dleaf >= 0 else None
+            if code == 1:
+                l0 = links[default]
+                m = (l0.busy_until - now) * l0.bytes_per_ns
+                if m < 0.0:
+                    m = 0.0
+                if remote is not None:
+                    r0 = remote[default]
+                    rb = (r0.busy_until - now) * r0.bytes_per_ns
+                    if rb > 0.0:
+                        m += rb
+                if m <= self._thr:
+                    spine = default
+            if spine < 0:
+                spine = pick_min_backlog(links, default, now, policy,
+                                         self._thr, remote)
+        link = self.leaf_up[sw][spine]
+        now = eng.now
+        bu = link.busy_until
+        start = bu if bu > now else now
+        link.busy_until = busy = start + size / link.bytes_per_ns
+        link.bytes_sent += size
+        if self._dp and self._rngr() < self._dp:
+            sim.dropped += 1
+            if not pkt.multicast:
+                self._pool_free(pkt)
+        else:
+            eng._seq = seq = eng._seq + 1
+            arrival = busy + link.latency_ns
+            q = link.inflight
+            q.append((arrival, seq, pkt))
+            if len(q) == 1:
+                _heappush(eng.heap, (arrival, seq, _EV_SW, self.L + spine,
+                                     sw, link))
 
     def forward_toward_switch(self, sim, sw: int, pkt: Packet) -> None:
         target = pkt.dest_switch
@@ -194,13 +328,39 @@ class FatTree(Topology):
                 self._send_spine_down(sim, self.spine_index(sw), 0, pkt)
 
     def out_port_send(self, sim, sw: int, port: int, pkt: Packet) -> None:
-        if self.is_leaf(sw):
-            if port < self.H:
-                self._send_leaf_to_host(sim, sw * self.H + port, pkt)
+        # broadcast fan-out hot path: resolve the link, then the same inline
+        # tx sequence as above (see the transmit section note)
+        H = self.H
+        if sw < self.L:
+            if port < H:
+                host = sw * H + port
+                link = self.host_down[host]
+                ev_kind, a, b = _EV_HOST, host, 0
             else:
-                self._send_leaf_up(sim, sw, port - self.H, pkt)
+                spine = port - H
+                link = self.leaf_up[sw][spine]
+                ev_kind, a, b = _EV_SW, self.L + spine, sw
         else:
-            self._send_spine_down(sim, self.spine_index(sw), port, pkt)
+            link = self.leaf_down[port][sw - self.L]
+            ev_kind, a, b = _EV_SW, port, H + sw - self.L
+        eng = self._engine
+        now = eng.now
+        bu = link.busy_until
+        size = pkt.size_bytes
+        start = bu if bu > now else now
+        link.busy_until = busy = start + size / link.bytes_per_ns
+        link.bytes_sent += size
+        if self._dp and self._rngr() < self._dp:
+            sim.dropped += 1
+            if not pkt.multicast:
+                self._pool_free(pkt)
+        else:
+            eng._seq = seq = eng._seq + 1
+            arrival = busy + link.latency_ns
+            q = link.inflight
+            q.append((arrival, seq, pkt))
+            if len(q) == 1:
+                _heappush(eng.heap, (arrival, seq, ev_kind, a, b, link))
 
     # ---- static-tree support ----------------------------------------------
     def root_candidates(self) -> List[int]:

@@ -104,20 +104,24 @@ def test_noise_honors_noise_lb_without_flowlets():
     used cfg.lb instead. Pinned here because no golden covers it."""
     from repro.core.canary import Packet, PacketKind
 
+    import random
+
+    from repro.core.canary.engine import EventLoop
+    from repro.core.canary.types import PacketPool
+
     class _StubSim:
+        # the facade protocol topologies program against (topology.py
+        # docstring): the engine clock + scheduler, drop state, the pool
         now = 0.0
-        rng = None
+        rng = random.Random(0)
         dropped = 0
-        scheduled = []
+        engine = EventLoop()
+        pool = PacketPool()
+        _drop_prob = 0.0
+        _rng_random = None
 
         def maybe_drop(self):
             return False
-
-        def arrive_switch(self, t, sw, port, pkt):
-            self.scheduled.append((sw, port))
-
-        def arrive_host(self, t, host, pkt):
-            pass
 
     net = _net(LoadBalancing.PER_PACKET, noise_lb=LoadBalancing.ECMP,
                flowlet_lb=False)
@@ -125,7 +129,9 @@ def test_noise_honors_noise_lb_without_flowlets():
     default = net.flow_hash(pkt) % net.S
     _heat(net, 0, default, 10 * net.cfg.buffer_bytes)  # hot default up-link
     before = net.leaf_up[0][default].bytes_sent
-    net.forward_toward_host(_StubSim(), 0, pkt)
+    stub = _StubSim()
+    net.bind(stub)
+    net.forward_toward_host(stub, 0, pkt)
     # ECMP noise must stay on the (hot) hash default; per_packet would move
     assert net.leaf_up[0][default].bytes_sent == before + pkt.size_bytes
 

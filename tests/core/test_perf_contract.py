@@ -1,0 +1,214 @@
+"""The performance contract: the optimized hot path is an *optimization*,
+never a behaviour change.
+
+The hot-path overhaul (pre-resolved handler tables, split timer heap with
+lazy cancellation, staged per-link arrivals, packet pooling, batched noise
+generation, GC pausing) must be observationally invisible:
+
+* every golden scenario replays bit-for-bit — same ``SimResult`` on every
+  pinned field *and* the same total ``EventLoop.events`` count (the engine
+  dispatches the exact same event sequence; identical per-app completion
+  times + link utilizations are only possible if ordering is preserved,
+  not just aggregate results);
+* packet-pool recycling is exact under the nastiest reuse pressure the
+  protocol generates — drops, retransmission generations, collisions and
+  broadcast fan-outs sharing one pool;
+* the ``max_events`` budget fires *before* dispatch (the pre-overhaul
+  engine only noticed after blowing past the limit).
+"""
+import heapq
+
+import pytest
+
+from golden_cases import CASES, build_simulator, load_goldens, result_to_jsonable
+from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
+from repro.core.canary.engine import (EV_PUMP, EV_RETX, EV_TIMER, EventLoop,
+                                      N_EVENT_KINDS)
+from repro.core.canary.types import PacketPool
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+# --------------------------------------------------------------- golden sweep
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_optimized_engine_replays_golden_with_identical_event_count(
+        name, goldens):
+    """All 15 goldens, bit-for-bit, including the dispatched-event count."""
+    sim = build_simulator(name)
+    result = sim.run()
+    got = result_to_jsonable(result)
+    want = goldens[name]
+    assert got == want, f"{name}: optimized engine diverged from golden"
+    # the SimResult event count is the engine's own dispatch counter — no
+    # drift between what ran and what was reported
+    assert result.events == sim.engine.events == want["events"]
+
+
+def test_event_stream_is_exhausted_or_stopped_cleanly():
+    """After a run the main heap holds only undispatched future events and
+    the engine's stop flag mirrors completion."""
+    sim = build_simulator("canary_basic")
+    sim.run()
+    assert sim.engine.stop
+    assert sim.all_done()
+
+
+# ------------------------------------------------------------------ pool reuse
+def _drops_sim(**kw) -> Simulator:
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4, table_size=64,
+                seed=5, drop_prob=0.02, retx_timeout_ns=5e4,
+                max_events=20_000_000)
+    base.update(kw)
+    cfg = SimConfig(**base)
+    return Simulator(cfg, [AllreduceJob(0, list(range(12)), 65536)],
+                     algo=Algo.CANARY)
+
+
+def test_packet_pool_reuse_exact_under_retransmission_generations():
+    """Drops force retransmitted generations (fresh ids, fresh paths) while
+    recycled Packet objects flow through every role — host sends, switch
+    flushes, collisions (table_size=64 forces them), bypasses, unicasts.
+    The reduction must stay exact and the pool must actually be exercised."""
+    sim = _drops_sim()
+    res = sim.run()
+    assert res.correct
+    assert res.retransmissions > 0, "cell must exercise retx generations"
+    assert res.dropped_packets > 0
+    pool = sim.pool
+    assert pool.reused > 0, "free list never reused — pooling inert"
+    assert pool.freed > 0
+    # double-free detector: the free list must never hold the same object
+    # twice (a duplicate would alias two future packets onto one object)
+    ids = list(map(id, pool._free))
+    assert len(ids) == len(set(ids)), "double free detected in packet pool"
+
+
+def test_packet_pool_never_pools_multicast_packets():
+    """Broadcast fan-outs schedule one object on several links; freeing one
+    would corrupt the others. Every packet in the free list must be linear."""
+    sim = _drops_sim(drop_prob=0.0, table_size=1)  # collisions + restorations
+    res = sim.run()
+    assert res.correct and res.collisions > 0
+    assert all(not p.multicast for p in sim.pool._free)
+    # free() resets the guarded fields, so a pooled packet can never leak a
+    # stale collision stamp or bypass flag into its next life
+    assert all(p.switch_addr == -1 and p.port_stamp == -1 and not p.bypass
+               and p.trace_node == -1 for p in sim.pool._free)
+
+
+def test_packet_pool_reuse_deterministic():
+    """Pooling must not introduce hidden cross-run state: two fresh sims
+    (each with its own pool) produce identical results."""
+    a = result_to_jsonable(_drops_sim().run())
+    b = result_to_jsonable(_drops_sim().run())
+    assert a == b
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PacketPool(max_free=2)
+    p1, p2, p3 = pool.alloc(), pool.alloc(), pool.alloc()
+    assert pool.allocated == 3 and pool.reused == 0
+    for p in (p1, p2, p3):
+        pool.free(p)
+    assert pool.freed == 2, "free list respects max_free"
+    q = pool.alloc()
+    assert q is p2 and pool.reused == 1  # LIFO reuse
+
+
+# ------------------------------------------------------- engine budget + heaps
+def _noop_handlers():
+    calls = []
+    def h(a, b, c):
+        calls.append((a, b, c))
+    return [h] * N_EVENT_KINDS, calls
+
+
+def test_max_events_budget_checked_before_dispatch():
+    """The budget fires *before* dispatch: exactly ``max_events`` events are
+    handled, the counter never passes the limit, and the over-budget event
+    stays undispatched (pre-overhaul the check ran only after incrementing
+    past the limit)."""
+    loop = EventLoop()
+    handlers, calls = _noop_handlers()
+    for i in range(5):
+        loop.push(float(i), EV_PUMP, i, 0, None)
+    with pytest.raises(RuntimeError, match="event budget"):
+        loop.run(handlers, max_events=3)
+    assert len(calls) == 3, "exactly max_events events dispatched"
+    assert loop.events == 3, "counter must not increment past the budget"
+    assert len(loop.heap) == 2, "over-budget events remain queued"
+
+
+def test_budget_counts_across_run_calls():
+    loop = EventLoop()
+    handlers, calls = _noop_handlers()
+    loop.push(0.0, EV_PUMP, 0, 0, None)
+    loop.run(handlers, max_events=10)
+    loop.push(1.0, EV_PUMP, 1, 0, None)
+    loop.push(2.0, EV_PUMP, 2, 0, None)
+    with pytest.raises(RuntimeError):
+        loop.run(handlers, max_events=2)  # lifetime budget, already spent 1
+    assert loop.events == 2
+
+
+def test_split_heaps_preserve_global_fifo_order():
+    """Timer-heap entries interleave with main-heap entries in exact
+    ``(time, seq)`` order — the split changes where an entry waits, never
+    when it dispatches. Simultaneous events stay FIFO in push order even
+    across the two heaps."""
+    loop = EventLoop()
+    order = []
+    handlers = [lambda a, b, c: order.append(a)] * N_EVENT_KINDS
+    loop.push(5.0, EV_PUMP, 0, 0, None)        # seq 1
+    loop.push_timer(5.0, EV_TIMER, 1, 0, None)  # seq 2: same t, later seq
+    loop.push_timer(3.0, EV_RETX, 2, 0, None)   # seq 3: earliest t
+    loop.push(5.0, EV_PUMP, 3, 0, None)        # seq 4
+    loop.push_timer(4.0, EV_TIMER, 4, 0, None)  # seq 5
+    loop.run(handlers, max_events=100)
+    assert order == [2, 4, 0, 1, 3]
+    assert loop.events == 5
+    assert loop.now == 5.0
+
+
+def test_staged_link_arrivals_keep_one_heap_entry_per_busy_link():
+    """The staged-arrival protocol: N in-flight packets on one link occupy
+    one heap entry (the FIFO head); the engine re-arms the next head on pop
+    with the (t, seq) assigned at transmit time."""
+    from repro.core.canary import scaled_config
+    cfg = scaled_config(4, seed=3)
+    n = cfg.num_hosts
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), 131072)],
+                    algo=Algo.CANARY,
+                    noise_hosts=list(range(n // 2, n)))
+    # drain some events, then audit the invariant mid-flight
+    handlers_done = []
+    orig = EventLoop.run
+
+    def run_probe(self, handlers, max_events, _heappop=heapq.heappop):
+        try:
+            orig(self, handlers, 5000)  # partial drain (hits the budget)
+        except RuntimeError:
+            pass
+        staged_links = [e[5] for e in self.heap if e[2] >= 8]
+        assert staged_links, "expected staged link arrivals mid-run"
+        assert len(staged_links) == len(set(map(id, staged_links))), \
+            "a busy link must have exactly one heap entry"
+        for e in self.heap:
+            if e[2] >= 8:
+                link = e[5]
+                assert link.inflight, "armed link with empty FIFO"
+                head = link.inflight[0]
+                assert (head[0], head[1]) == (e[0], e[1]), \
+                    "heap entry must mirror the FIFO head's (t, seq)"
+        handlers_done.append(True)
+        orig(self, handlers, max_events)  # finish the run
+
+    EventLoop.run = run_probe
+    try:
+        res = sim.run()
+    finally:
+        EventLoop.run = orig
+    assert handlers_done and res.correct
