@@ -40,6 +40,31 @@ def bench_size() -> int:
     return 2 ** 20                  # 1 MiB at 1/16 scale
 
 
+def provenance() -> Dict[str, object]:
+    """Environment fingerprint recorded in every benchmark JSON document, so
+    ``BENCH_*.json`` / ``sweep_*.json`` trajectories are comparable across
+    machines and env-knob settings (a FAST run and a paper-scale run must
+    never be mistaken for each other)."""
+    import platform
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    return dict(
+        bench_fast=FAST,
+        bench_paper_scale=PAPER,
+        sweep_reps=os.environ.get("SWEEP_REPS"),
+        git_sha=sha,
+        python=platform.python_version(),
+        platform=platform.platform(),
+        cpu_count=os.cpu_count(),
+    )
+
+
 ROWS: List[str] = []
 
 

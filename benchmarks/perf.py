@@ -54,6 +54,7 @@ from typing import Callable, Dict, Optional, Tuple
 from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
                                scaled_config, three_tier_config)
 
+from . import common
 from .common import FAST, emit
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "perf_baseline.json")
@@ -292,6 +293,7 @@ def main(argv=None) -> None:
         "pinned_reference_rates": pinned,
         "python": platform.python_version(),
         "machine": platform.machine(),
+        "provenance": common.provenance(),
     }
     path = os.environ.get("PERF_JSON", "PERF_RESULTS.json")
     with open(path, "w") as fh:

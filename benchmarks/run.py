@@ -6,9 +6,14 @@ so the bench trajectory can be tracked across PRs. Environment knobs:
 BENCH_FAST=1 (CI smoke), BENCH_PAPER_SCALE=1 (the paper's 1024-host network
 and 4 MiB messages — slow), BENCH_ONLY=fig7 (comma-list filter),
 BENCH_JSON=path (JSON output location, default BENCH_RESULTS.json).
+
+``--backend flow`` (or SWEEP_BACKEND=flow) routes the sweep suite through
+the flow-level model (``repro.core.flow``) instead of the packet engine —
+the only way the paper-scale fabrics are tractable as a bench suite.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -16,7 +21,12 @@ import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend",
+                    default=os.environ.get("SWEEP_BACKEND", "packet"),
+                    help="sweep suite executor: packet (default) | flow")
+    args = ap.parse_args(argv)
     from . import (collective_bench, common, fig2_overview, fig6_single_switch,
                    fig7_static_vs_canary, fig8_congestion_intensity,
                    fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,
@@ -38,6 +48,7 @@ def main() -> None:
         "fleet": fleet.main,
         "workload": workload.main,
         "sweep": lambda: sweep.main(["--suite", "fig7", "--reps", "1",
+                                     "--backend", args.backend,
                                      "--out", os.environ.get(
                                          "SWEEP_JSON", "sweep_fig7.json")]),
     }
@@ -70,6 +81,7 @@ def main() -> None:
                           row.split(",", 2))) for row in common.ROWS],
         "env": {k: os.environ.get(k) for k in
                 ("BENCH_FAST", "BENCH_PAPER_SCALE", "BENCH_ONLY")},
+        "provenance": common.provenance(),
     }
     json_path = os.environ.get("BENCH_JSON", "BENCH_RESULTS.json")
     with open(json_path, "w") as fh:

@@ -1,0 +1,175 @@
+"""Fit the flow model's calibration constants against packet-engine sweeps.
+
+Usage::
+
+    PYTHONPATH=src python scripts/fit_flow_model.py ref1.json ref2.json ...
+
+Each input is a ``benchmarks/sweep.py`` output document produced by the
+*packet* backend (any mix of topologies/scales — the fit pools them). For
+every (topology, algorithm family) present, the script grid-searches the
+:class:`repro.core.flow.calibrate.FamilyParams` constants that minimize the
+worst relative runtime error over that family's cells, prints the fitted
+table in copy-pastable form plus per-cell residuals, and exits non-zero if
+the best fit still leaves a cell beyond ``--tol``.
+
+This is the *refit* path referred to in ``calibrate.py`` — the constants it
+prints are reviewed and pinned there by hand, never applied automatically.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import sys
+
+from repro.core.flow.calibrate import CALIBRATION, FamilyParams
+from repro.core.flow.model import lower_item, solve_cell
+
+
+def _cells_from_doc(doc: dict):
+    """Pair the document's work items with its measured runtimes. Documents
+    written before work items were embedded fall back to re-expanding the
+    suite — only valid when the BENCH_* env matches the original run."""
+    items = doc.get("items")
+    if items is None:
+        from benchmarks.sweep import expand_suite
+        items = expand_suite(doc["suite"], doc["topology"], doc["reps"])
+    measured = {(c["label"], c["rep"]): c["runtime_us"]
+                for c in doc["results"]}
+    out = []
+    for it in items:
+        key = (it["label"], it["rep"])
+        if key in measured:
+            out.append((it, measured[key]))
+    return out
+
+
+def _family(item) -> str:
+    return item["algo"]
+
+
+def _topology_kind(item) -> str:
+    return item["cfg"]["topology"]
+
+
+def _eval(cells, params: FamilyParams):
+    """Max and per-cell relative runtime error under ``params``."""
+    errs = []
+    for item, meas_us in cells:
+        CALIBRATION[(_topology_kind(item), _family(item))] = params
+        cell = lower_item(item)
+        t_ns, _ = solve_cell(cell)
+        errs.append(((item["label"], item["rep"], item["data_bytes"]),
+                     (t_ns / 1e3 - meas_us) / meas_us, t_ns / 1e3, meas_us))
+    return errs
+
+
+# message sizes at or below this are smoke-scale cells: they are gated by
+# validate.FAST_TOLERANCE, not the mid-scale acceptance bound
+SMOKE_MAX_BYTES = 128 * 1024
+
+
+def _tol_for(nbytes: int, tol: float, smoke_tol: float) -> float:
+    return smoke_tol if nbytes <= SMOKE_MAX_BYTES else tol
+
+
+def _agg_err(errs, per_label: bool, tol: float, smoke_tol: float):
+    """Objective: worst *tolerance-normalized* |relative error| on
+    per-(label, scale)-mean runtimes — exactly the contract ``validate.py``
+    enforces: smoke-scale cells get the loose FAST bound, and a label whose
+    packet reps spread further apart than its own tolerance is exempt (a
+    self-inconsistent reference is noise, not a standard). <= 1.0 passes.
+
+    ``per_label=False`` drops to raw worst per-cell error (debug)."""
+    if not per_label:
+        return max(abs(e[1]) for e in errs)
+    by_label = {}
+    for (label, _rep, nbytes), _e, pred, meas in errs:
+        by_label.setdefault((label, nbytes), [[], []])
+        by_label[(label, nbytes)][0].append(pred)
+        by_label[(label, nbytes)][1].append(meas)
+    worst = 0.0
+    for (label, nbytes), (preds, meass) in by_label.items():
+        tol_s = _tol_for(nbytes, tol, smoke_tol)
+        if max(meass) / min(meass) - 1.0 > tol_s:
+            continue        # reference unstable at this label/scale
+        p, m = sum(preds) / len(preds), sum(meass) / len(meass)
+        worst = max(worst, abs(p - m) / m / tol_s)
+    return worst
+
+
+GRIDS = {
+    "canary": dict(
+        kappa=[0.6, 0.8, 1.0],
+        floor=[0.04, 0.05, 0.06, 0.08, 0.10],
+        mu=[1.0, 1.2, 1.4, 1.6, 1.8],
+        nu=[0.5, 1.0, 1.5, 2.0],
+        sigma=[0.0, 0.5, 1.0, 1.5, 2.0],
+        mu_ntree=[0.0],
+        pool=[1.0]),
+    "static_tree": dict(
+        kappa=[0.9, 1.0, 1.1, 1.2, 1.35],
+        floor=[0.04, 0.05, 0.055, 0.06, 0.08],
+        mu=[1.4, 1.8, 2.0, 2.4],
+        nu=[0.0, 1.0],
+        sigma=[0.0],
+        mu_ntree=[0.0, 0.4, 0.8],
+        pool=[1.0, 0.97, 0.95, 0.93, 0.9, 0.85]),
+}
+
+
+def fit_family(cells, family: str, per_label: bool, tol: float,
+               smoke_tol: float):
+    grid = GRIDS.get(family, GRIDS["static_tree"])
+    names = list(grid)
+    best, best_err = None, float("inf")
+    for combo in itertools.product(*(grid[n] for n in names)):
+        params = FamilyParams(**dict(zip(names, combo)))
+        err = _agg_err(_eval(cells, params), per_label, tol, smoke_tol)
+        if err < best_err:
+            best, best_err = params, err
+    return best, best_err
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("refs", nargs="+", help="packet sweep JSON documents")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="acceptance bound for mid-scale label means "
+                         "(validate.MID_TOLERANCE)")
+    ap.add_argument("--smoke-tol", type=float, default=0.60,
+                    help="bound for smoke-scale (<=128 KiB) label means "
+                         "(validate.FAST_TOLERANCE)")
+    ap.add_argument("--per-cell", action="store_true",
+                    help="fit worst per-(cell,rep) error instead of "
+                         "per-label means")
+    args = ap.parse_args(argv)
+
+    groups = {}
+    for path in args.refs:
+        doc = json.load(open(path))
+        if doc.get("backend", "packet") != "packet":
+            raise SystemExit(f"{path}: not a packet-backend document")
+        for item, meas in _cells_from_doc(doc):
+            groups.setdefault((_topology_kind(item), _family(item)),
+                              []).append((item, meas))
+
+    ok = True
+    for (topo, family), cells in sorted(groups.items()):
+        params, err = fit_family(cells, family, not args.per_cell,
+                                 args.tol, args.smoke_tol)
+        status = "OK " if err <= 1.0 else "FAIL"
+        print(f"[{status}] ({topo!r}, {family!r}): worst normalized err "
+              f"{err:.2f} (1.0 = at tolerance)  ->  {params}")
+        for key, e, pred, meas in sorted(_eval(cells, params)):
+            tol_s = _tol_for(key[2], args.tol, args.smoke_tol)
+            flag = f"  <-- beyond {tol_s:.0%}" if abs(e) > tol_s else ""
+            print(f"    {key[0]:24s} rep{key[1]} {key[2] // 1024:5d}KiB  "
+                  f"pred={pred:9.1f}us meas={meas:9.1f}us  "
+                  f"err={e * 100:+6.1f}%{flag}")
+        ok &= err <= 1.0
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

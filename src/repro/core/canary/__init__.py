@@ -6,6 +6,8 @@ registry) / ``hostproto`` (host protocol) / ``workloads`` (disturbance
 models), behind the :class:`Simulator` facade.
 """
 from .algorithms import ExperimentResult, compare_algorithms, run_allreduce
+from .backends import (BACKENDS, Backend, PacketBackend, get_backend,
+                       register_backend, run_cells)
 from .engine import EventLoop
 from .hostproto import HostProtocol, RingStrategy
 from .memory_model import OccupancyModel, model_for, paper_example
@@ -16,21 +18,24 @@ from .switch import (ALGORITHMS, AggregationStrategy, CanaryStrategy,
                      register_algorithm)
 from .topology import (TOPOLOGIES, Link, ThreeTierFatTree, Topology,
                        make_topology, register_topology)
-from .types import (Algo, AllreduceJob, Descriptor, LoadBalancing, Packet,
-                    PacketKind, SimConfig, SimResult, TenantSpec, block_key,
-                    id_app, id_block, id_gen, make_id, paper_config,
-                    scaled_config, three_tier_config)
+from .types import (PAPER_SCALES, Algo, AllreduceJob, Descriptor,
+                    LoadBalancing, Packet, PacketKind, SimConfig, SimResult,
+                    TenantSpec, block_key, id_app, id_block, id_gen, make_id,
+                    paper_config, paper_scale_config, scaled_config,
+                    three_tier_config)
 from .workloads import CongestionWorkload
 
 __all__ = [
     "ALGORITHMS", "Algo", "AllreduceJob", "AggregationStrategy",
-    "CanaryStrategy", "CongestionWorkload", "Descriptor", "EventLoop",
-    "ExperimentResult", "FatTree", "HostProtocol", "Link", "LoadBalancing",
-    "OccupancyModel", "Packet", "PacketKind", "RingStrategy", "SimConfig",
-    "SimResult", "Simulator", "StaticTreeStrategy", "SwitchLayer",
-    "TOPOLOGIES", "TenantSpec", "ThreeTierFatTree", "Topology", "block_key",
-    "compare_algorithms", "contribution", "id_app", "id_block", "id_gen",
-    "make_id", "make_strategy", "make_topology", "model_for", "paper_example",
-    "paper_config", "register_algorithm", "register_topology",
-    "run_allreduce", "scaled_config", "three_tier_config",
+    "BACKENDS", "Backend", "CanaryStrategy", "CongestionWorkload",
+    "Descriptor", "EventLoop", "ExperimentResult", "FatTree", "HostProtocol",
+    "Link", "LoadBalancing", "OccupancyModel", "PAPER_SCALES", "Packet",
+    "PacketBackend", "PacketKind", "RingStrategy", "SimConfig", "SimResult",
+    "Simulator", "StaticTreeStrategy", "SwitchLayer", "TOPOLOGIES",
+    "TenantSpec", "ThreeTierFatTree", "Topology", "block_key",
+    "compare_algorithms", "contribution", "get_backend", "id_app",
+    "id_block", "id_gen", "make_id", "make_strategy", "make_topology",
+    "model_for", "paper_example", "paper_config", "paper_scale_config",
+    "register_algorithm", "register_backend", "register_topology",
+    "run_allreduce", "run_cells", "scaled_config", "three_tier_config",
 ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 
 class PacketKind(enum.IntEnum):
@@ -355,6 +355,43 @@ def scaled_config(scale: int = 8, **overrides) -> "SimConfig":
                 table_size=max(4096, scale * scale * 64))
     base.update(overrides)
     return SimConfig(**base)
+
+
+# Paper-scale parameterizations (1024-4096 hosts). These are the grids the
+# flow-level backend (repro.core.flow) exists for: a packet-level cell at
+# these sizes costs minutes-to-hours of event dispatch, a flow-level cell is
+# one row of a batched XLA call. ``benchmarks/sweep.py --topology <name>``
+# accepts any key. Fat trees stay full-bisection (num_spines == up-ports per
+# leaf); the folded-Clos entries keep the bench profile's 2:1 leaf->agg
+# oversubscription so congestion actually binds.
+PAPER_SCALES: Dict[str, Callable[..., "SimConfig"]] = {
+    "fat_tree_1024": lambda **o: paper_config(**o),
+    "fat_tree_2048": lambda **o: paper_config(
+        num_leaves=64, hosts_per_leaf=32, num_spines=32,
+        table_size=65536, **o),
+    "fat_tree_4096": lambda **o: paper_config(
+        num_leaves=64, hosts_per_leaf=64, num_spines=64,
+        table_size=131072, **o),
+    "three_tier_1024": lambda **o: three_tier_config(
+        num_pods=8, leaves_per_pod=4, hosts_per_leaf=32,
+        aggs_per_pod=16, num_cores=16, **o),
+    "three_tier_2048": lambda **o: three_tier_config(
+        num_pods=8, leaves_per_pod=8, hosts_per_leaf=32,
+        aggs_per_pod=16, num_cores=32, **o),
+    "three_tier_4096": lambda **o: three_tier_config(
+        num_pods=16, leaves_per_pod=8, hosts_per_leaf=32,
+        aggs_per_pod=16, num_cores=32, **o),
+}
+
+
+def paper_scale_config(name: str, **overrides) -> "SimConfig":
+    """Build one of the named 1024-4096-host parameterizations."""
+    try:
+        factory = PAPER_SCALES[name]
+    except KeyError:
+        raise KeyError(f"unknown paper-scale topology {name!r} "
+                       f"(have: {', '.join(sorted(PAPER_SCALES))})") from None
+    return factory(**overrides)
 
 
 @dataclass

@@ -1,0 +1,42 @@
+"""Flow-level fast path: predict allreduce runtime without dispatching packets.
+
+The packet engine (``repro.core.canary``) is the exact reference: every
+packet is a discrete event, so a paper-scale (1024-host, 4 MiB) cell costs
+tens of millions of Python events. This package trades exactness for
+orders-of-magnitude speed: each experiment cell is *lowered* to a small
+bandwidth-sharing problem over the aggregation tree's link classes
+(``model.py``), the whole sweep matrix is stacked into padded arrays, and
+one ``jit``-ted, ``vmap``-ed JAX computation solves every cell x rep at
+once (``batch.py``). Calibration constants pinning the model to the packet
+engine live in ``calibrate.py``; the divergence contract is enforced by
+``validate.py`` (see ARCHITECTURE.md §Backends for the equations and the
+documented tolerance).
+
+Import contract: ``import repro.core.flow`` must NOT import jax — the
+lowering and calibration are pure Python, and only :class:`FlowBackend` /
+``run_batch`` pull jax on first use (PEP 562, same pattern as
+``repro.models``). This keeps ``repro.core.canary``'s backend registry —
+which maps ``"flow"`` to this package — jax-free until someone actually
+selects the flow backend.
+"""
+from .calibrate import CALIBRATION, FamilyParams, params_for
+from .model import FlowCell, lower_item
+
+_LAZY_BACKEND = ("FlowBackend", "run_batch", "trace_count")
+
+__all__ = ["CALIBRATION", "FamilyParams", "FlowBackend", "FlowCell",
+           "lower_item", "params_for", "run_batch", "trace_count"]
+
+
+def __getattr__(name: str):
+    if name in ("run_batch", "trace_count"):
+        from . import batch
+        return getattr(batch, name)
+    if name == "FlowBackend":
+        from .backend import FlowBackend
+        return FlowBackend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

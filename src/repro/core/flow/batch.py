@@ -1,0 +1,78 @@
+"""Batched JAX evaluation of lowered flow cells.
+
+The whole sweep matrix — every (algorithm, congestion, rep) cell — becomes
+ONE ``jit``-ted, ``vmap``-ed call over padded arrays: link loads and noise
+shares are stacked to ``[cells, max_links]`` (padding with zero load, which
+can never win the max), scalars to ``[cells]``. At paper scale that is a
+~[40, 130] float32 problem — the cost of the flow backend is the Python
+lowering, not the solve, and the solve count is what the compile-count
+contract pins: ``trace_count()`` increments only while JAX is *tracing* the
+cell function, so a whole matrix must cost exactly one trace
+(``tests/flow/test_flow_backend.py``).
+
+This module is the only part of the flow package that imports jax, and it
+is imported lazily (``repro.core.flow.__getattr__``).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import FlowCell
+
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """How many times the cell solver has been traced (== compiled) in this
+    process. The batching contract: one call per sweep matrix, however many
+    cells x reps it holds."""
+    return _TRACE_COUNT
+
+
+def _solve_one(load, g, kappa, floor, mu, nu, t_send, tail, g_mix,
+               bytes_per_ns, data_bits):
+    """Solve one cell; vmapped over the leading axis of every argument.
+
+    Mirrors ``model.solve_cell`` exactly — keep the two in lockstep (pinned
+    by the parity test in tests/flow/).
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1            # Python side effect: runs per TRACE only
+    avail = jnp.clip(1.0 - kappa * g, floor, 1.0)
+    t_bw = jnp.max(load / (bytes_per_ns * avail))
+    t_mix = t_send * (1.0 + mu * g_mix)
+    t = jnp.maximum(t_bw, t_mix) + tail * (1.0 + nu * g_mix)
+    return t, data_bits / t
+
+
+_solve_batch = jax.jit(jax.vmap(_solve_one))
+
+
+def pack(cells: List[FlowCell]):
+    """Stack lowered cells into padded arrays (pad links with load=0,
+    avail=1: a zero-load link can never be the bottleneck)."""
+    m = max(len(c.link_load_bytes) for c in cells)
+    load = jnp.asarray([c.link_load_bytes + [0.0] * (m - len(c.link_load_bytes))
+                        for c in cells], dtype=jnp.float32)
+    g = jnp.asarray([c.link_noise_frac + [0.0] * (m - len(c.link_noise_frac))
+                     for c in cells], dtype=jnp.float32)
+    scal = {name: jnp.asarray([getattr(c, name) for c in cells],
+                              dtype=jnp.float32)
+            for name in ("kappa", "floor", "mu", "nu", "t_send_ns",
+                         "tail_ns", "g_mix", "bytes_per_ns", "data_bits")}
+    return load, g, scal
+
+
+def run_batch(cells: List[FlowCell]) -> Tuple[List[float], List[float]]:
+    """Solve every cell in one jitted call. Returns (runtime_ns[], goodput
+    _gbps[]) as plain Python floats, cell order preserved."""
+    if not cells:
+        return [], []
+    load, g, s = pack(cells)
+    t, gp = _solve_batch(load, g, s["kappa"], s["floor"], s["mu"], s["nu"],
+                         s["t_send_ns"], s["tail_ns"], s["g_mix"],
+                         s["bytes_per_ns"], s["data_bits"])
+    return [float(x) for x in t], [float(x) for x in gp]

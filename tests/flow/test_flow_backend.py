@@ -1,0 +1,206 @@
+"""Contracts for the flow-level fast path (``repro.core.flow``).
+
+Four layers of guarantees, mirroring ARCHITECTURE.md §Backends:
+
+* **Model properties** — runtime strictly increases with message size and
+  never improves under congestion, on both fabrics and both algorithm
+  families. Pure-Python ``solve_cell`` path: no jax needed.
+* **Batching contract** — the whole sweep matrix is ONE jitted dispatch:
+  the first ``run_batch`` of a given shape costs exactly one trace, a
+  repeat costs zero, and the jitted numbers match the pure-Python solver.
+* **Isolation contract** — importing the flow package (and resolving the
+  backend registry) leaves the packet engine untouched: all goldens stay
+  bit-for-bit, and ``repro.core.canary`` / ``repro.core.flow`` import
+  without pulling jax (only instantiating the flow *backend* may).
+* **Divergence contract** — flow vs packet on the pinned fig7 grid stays
+  within the documented tolerance (FAST smoke here; the ±15% acceptance
+  bound is checked at mid scale by ``python -m repro.core.flow.validate``).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(ROOT, "tests", "core"))
+
+KiB = 1024
+
+
+def _item(topology="fat_tree", algo="canary", n_trees=1, congestion=False,
+          data_bytes=128 * KiB, rep=0):
+    """A hand-built sweep work item at FAST-ish scale (independent of the
+    BENCH_* env, unlike ``benchmarks.sweep.expand_suite``)."""
+    from repro.core.canary import scaled_config, three_tier_config
+    if topology == "fat_tree":
+        cfg = scaled_config(4)
+    else:
+        cfg = three_tier_config(num_pods=4, leaves_per_pod=2,
+                                hosts_per_leaf=4, aggs_per_pod=2, num_cores=4)
+    n = max(2, cfg.num_hosts // 2)
+    return dict(label=f"{algo}{n_trees}/cong={int(congestion)}", algo=algo,
+                n_trees=n_trees, congestion=congestion, num_hosts=n,
+                data_bytes=data_bytes, rep=rep, topology=topology,
+                cfg=dataclasses.asdict(cfg))
+
+
+def _grid(data_bytes=128 * KiB):
+    items = []
+    for topo in ("fat_tree", "three_tier"):
+        for cong in (False, True):
+            for algo, nt in (("canary", 1), ("static_tree", 1),
+                             ("static_tree", 4)):
+                items.append(_item(topo, algo, nt, cong, data_bytes))
+    return items
+
+
+def _solve(item):
+    from repro.core.flow.model import lower_item, solve_cell
+    return solve_cell(lower_item(item))
+
+
+# --------------------------------------------------------------------------
+# Model properties (pure Python, no jax)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+@pytest.mark.parametrize("algo", ["canary", "static_tree"])
+@pytest.mark.parametrize("congestion", [False, True])
+def test_runtime_monotone_in_data_bytes(topology, algo, congestion):
+    sizes = [64 * KiB, 128 * KiB, 512 * KiB, 2048 * KiB]
+    runtimes = [_solve(_item(topology, algo, 1, congestion, s))[0]
+                for s in sizes]
+    for a, b in zip(runtimes, runtimes[1:]):
+        assert b > a, f"runtime not increasing in data_bytes: {runtimes}"
+
+
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+@pytest.mark.parametrize("algo", ["canary", "static_tree"])
+@pytest.mark.parametrize("n_trees", [1, 4])
+def test_congestion_never_helps(topology, algo, n_trees):
+    quiet, _ = _solve(_item(topology, algo, n_trees, congestion=False))
+    noisy, _ = _solve(_item(topology, algo, n_trees, congestion=True))
+    assert noisy >= quiet
+
+
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+def test_goodput_is_data_over_runtime(topology):
+    item = _item(topology, "canary", 1, True)
+    from repro.core.flow.model import lower_item, solve_cell
+    cell = lower_item(item)
+    t_ns, gp = solve_cell(cell)
+    assert gp == pytest.approx(cell.data_bits / t_ns)  # bits/ns == Gbps
+
+
+# --------------------------------------------------------------------------
+# Batching contract (jax)
+# --------------------------------------------------------------------------
+def test_one_trace_per_matrix_and_python_parity():
+    jax = pytest.importorskip("jax")  # noqa: F841  (flow batch needs jax)
+    from repro.core.flow import batch
+    from repro.core.flow.model import lower_item, solve_cell
+    cells = [lower_item(it) for it in _grid()]
+    # unique shape for this test so the jit cache state is deterministic
+    before = batch.trace_count()
+    t_jit, gp_jit = batch.run_batch(cells)
+    assert batch.trace_count() - before == 1, \
+        "a whole matrix must compile exactly once"
+    again = batch.run_batch(cells)
+    assert batch.trace_count() - before == 1, \
+        "re-running the same matrix must not retrace"
+    assert again[0] == t_jit
+    for cell, t, gp in zip(cells, t_jit, gp_jit):
+        t_py, gp_py = solve_cell(cell)
+        assert t == pytest.approx(t_py, rel=1e-4)
+        assert gp == pytest.approx(gp_py, rel=1e-4)
+
+
+def test_flow_backend_cell_schema_and_single_dispatch():
+    pytest.importorskip("jax")
+    from repro.core.canary import get_backend
+    bk = get_backend("flow")
+    items = _grid()
+    cells = bk.run_cells(items)
+    assert bk.jit_calls == 1
+    assert len(cells) == len(items)
+    for item, c in zip(items, cells):
+        assert c["label"] == item["label"] and c["rep"] == item["rep"]
+        assert c["runtime_us"] > 0 and c["goodput_gbps"] > 0
+        assert c["correct"] is True and c["backend"] == "flow"
+        assert c["bound"] in ("bw", "mix")
+        assert c["jit_traces"] <= 1
+
+
+def test_sweep_doc_flow_backend_shape(tmp_path):
+    pytest.importorskip("jax")
+    from benchmarks.sweep import run_sweep
+    doc = run_sweep("fig7", "fat_tree", reps=1, backend="flow")
+    assert doc["backend"] == "flow"
+    assert doc["jit_traces"] <= 1
+    assert "provenance" in doc and "python" in doc["provenance"]
+    assert "items" in doc and len(doc["items"]) == len(doc["results"])
+    assert set(doc["aggregates"]) == {
+        f"{l}/cong={c}" for l in ("static1", "static2", "static4",
+                                  "static8", "canary") for c in (0, 1)}
+
+
+# --------------------------------------------------------------------------
+# Isolation contract
+# --------------------------------------------------------------------------
+def test_flow_import_leaves_goldens_bit_identical():
+    """Resolving the flow backend must not perturb the packet engine: replay
+    every golden with repro.core.flow fully imported."""
+    pytest.importorskip("jax")
+    from repro.core.canary import get_backend
+    get_backend("flow")  # force the jax-importing modules in
+    from golden_cases import (CASES, build_simulator, load_goldens,
+                              result_to_jsonable)
+    goldens = load_goldens()
+    for name in sorted(CASES):
+        got = result_to_jsonable(build_simulator(name).run())
+        assert got == goldens[name], \
+            f"golden {name!r} diverged with flow backend imported"
+
+
+def test_canary_and_flow_import_jax_free():
+    """The core simulator and the flow package (model/calibration) must
+    import without jax — only the flow *backend* (batch.py) may pull it.
+    Subprocess: sys.modules is shared in-session."""
+    script = (
+        "import sys\n"
+        "import repro.core.canary as c\n"
+        "import repro.core.flow as f\n"
+        "from repro.core.flow.model import lower_item, solve_cell\n"
+        "from repro.core.canary import BACKENDS, get_backend\n"
+        "assert 'flow' in BACKENDS and 'packet' in BACKENDS\n"
+        "get_backend('packet')\n"
+        "assert 'jax' not in sys.modules, 'core import pulled jax'\n"
+        "print('JAXFREE_OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env, cwd=ROOT,
+                          capture_output=True, text=True, timeout=120)
+    assert "JAXFREE_OK" in proc.stdout, proc.stdout + "\n" + proc.stderr
+
+
+# --------------------------------------------------------------------------
+# Divergence contract (FAST smoke; mid-scale run is the acceptance gate)
+# --------------------------------------------------------------------------
+def test_flow_vs_packet_pinned_grid_fast(tmp_path):
+    pytest.importorskip("jax")
+    out = tmp_path / "flow_validation.json"
+    env = dict(os.environ)
+    env["BENCH_FAST"] = "1"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.flow.validate", "--out", str(out)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    report = json.loads(out.read_text())
+    assert report["ok"] and report["fast"]
+    assert report["tolerance"] == pytest.approx(0.60)
+    assert {g["topology"] for g in report["grids"]} == \
+        {"fat_tree", "three_tier"}
