@@ -31,7 +31,7 @@ def main(argv=None) -> None:
                    fig7_static_vs_canary, fig8_congestion_intensity,
                    fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,
                    fleet, mem_model, perf, roofline, sweep, trace_replay,
-                   workload)
+                   transport, workload)
     suites = {
         "perf": lambda: perf.main([]),
         "fig2": fig2_overview.main,
@@ -47,6 +47,7 @@ def main(argv=None) -> None:
         "trace": trace_replay.main,
         "fleet": fleet.main,
         "workload": workload.main,
+        "transport": transport.main,
         "sweep": lambda: sweep.main(["--suite", "fig7", "--reps", "1",
                                      "--backend", args.backend,
                                      "--out", os.environ.get(
@@ -57,10 +58,12 @@ def main(argv=None) -> None:
         keep = set(only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
     else:
-        # the perf suite (A/B vs the vendored pre-PR engine) has its own CI
-        # step and entry point (python -m benchmarks.perf); opt in to the
-        # aggregate run with BENCH_ONLY=perf,...
+        # the perf suite (A/B vs the vendored pre-PR engine) and the
+        # transport suite each have their own CI step and entry point
+        # (python -m benchmarks.perf / benchmarks.transport); opt in to the
+        # aggregate run with BENCH_ONLY=perf,transport,...
         suites.pop("perf", None)
+        suites.pop("transport", None)
     print("name,us_per_call,derived")
     failures = []
     timings = {}

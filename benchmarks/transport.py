@@ -1,0 +1,136 @@
+"""Transport-policy suite: CANARY vs STATIC_TREE vs RING across congestion
+intensities and loss rates, with the transport layer on and off, on both
+fabrics (fat_tree and three_tier).
+
+Two axes:
+
+* **congestion** — a fraction of hosts runs the allreduce while the rest
+  blast random-uniform noise; each cell runs with ``transport="none"`` and
+  ``transport="dcqcn"`` (ECN marking + CNP rate control + PFC).  The headline
+  rows report the Canary-vs-static-tree speedup ratio with DCQCN on vs off.
+* **loss** — ``drop_prob > 0`` with ``transport="none"`` (bare whole-block
+  retx timers) and ``transport="gbn"`` (per-flow go-back-N).  Every cell
+  asserts the reduction stayed exact.
+
+Writes a machine-readable JSON document (default ``TRANSPORT_RESULTS.json``,
+override with ``BENCH_TRANSPORT_JSON``) carrying per-cell transport telemetry
+and per-cause drop counters alongside the usual provenance block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+from repro.core.canary import Algo, run_allreduce, three_tier_config
+
+from .common import (FAST, PAPER, bench_cfg, bench_size, emit, provenance,
+                     timed)
+
+CONGESTION_FRACS = (0.25, 0.5, 0.75)
+DROP_PROBS = (0.01,) if FAST else (0.002, 0.01)
+ALGOS = ((Algo.CANARY, "canary"), (Algo.STATIC_TREE, "static1"),
+         (Algo.RING, "ring"))
+
+
+def _fabrics():
+    fat = bench_cfg()
+    if FAST:
+        tt = three_tier_config(seed=fat.seed)                  # 32 hosts
+    elif PAPER:
+        tt = three_tier_config(num_pods=8, leaves_per_pod=4,
+                               hosts_per_leaf=16, aggs_per_pod=4,
+                               num_cores=16, seed=fat.seed)    # 512 hosts
+    else:
+        tt = three_tier_config(hosts_per_leaf=8, seed=fat.seed)  # 64 hosts
+    return (("fat_tree", fat), ("three_tier", tt))
+
+
+def _bench_bytes() -> int:
+    if PAPER:
+        return bench_size()
+    return 64 * 2 ** 10 if FAST else 256 * 2 ** 10
+
+
+def _cell(cfg, algo, label, fabric, n, size, transport, *, congestion,
+          cells: List[Dict[str, object]], tag: str,
+          require_exact: bool = True) -> float:
+    tcfg = dataclasses.replace(cfg, transport=transport)
+    r, us = timed(run_allreduce, tcfg, algo, n, size, congestion=congestion,
+                  reps=1)
+    sim_res = r.reps[0]
+    if require_exact:
+        assert r.correct, (f"{tag}: inexact reduction under "
+                           f"transport={transport!r} on {fabric}")
+    cells.append(dict(
+        axis=tag.split("/", 1)[0], fabric=fabric, algo=label,
+        transport=transport, hosts=n, data_bytes=size,
+        drop_prob=tcfg.drop_prob, congestion=congestion,
+        runtime_us=round(r.runtime_us_mean, 3),
+        goodput_gbps=round(r.goodput_gbps_mean, 3),
+        correct=r.correct,
+        retransmissions=sim_res.retransmissions,
+        drop_causes=sim_res.drop_causes,
+        transport_stats=sim_res.transport_stats,
+    ))
+    emit(tag, us,
+         f"runtime_us={r.runtime_us_mean:.1f};correct={r.correct}")
+    return r.runtime_us_mean
+
+
+def main() -> None:
+    size = _bench_bytes()
+    cells: List[Dict[str, object]] = []
+    headline: List[Dict[str, object]] = []
+
+    for fabric, cfg in _fabrics():
+        # ---- congestion axis: none vs dcqcn under background noise --------
+        for frac in CONGESTION_FRACS:
+            n = max(2, int(cfg.num_hosts * frac))
+            runtimes: Dict[tuple, float] = {}
+            for transport in ("none", "dcqcn"):
+                for algo, label in ALGOS:
+                    tag = (f"transport/{fabric}/{label}/frac{frac:.0%}"
+                           f"/{transport}")
+                    runtimes[(label, transport)] = _cell(
+                        cfg, algo, label, fabric, n, size, transport,
+                        congestion=True, cells=cells, tag=tag)
+            for transport in ("none", "dcqcn"):
+                speedup = (runtimes[("static1", transport)]
+                           / runtimes[("canary", transport)])
+                headline.append(dict(
+                    fabric=fabric, congestion_frac=frac, transport=transport,
+                    canary_vs_static_speedup=round(speedup, 4)))
+                emit(f"transport/headline/{fabric}/frac{frac:.0%}"
+                     f"/{transport}", 0.0,
+                     f"canary_vs_static_speedup={speedup:.3f}")
+
+        # ---- loss axis: none vs gbn under drop_prob > 0 -------------------
+        # Under the bare transport only CANARY recovers from loss (its FAIL
+        # protocol arms whole-block retx timers); RING and STATIC_TREE have
+        # no loss recovery of their own, so exactness is only asserted where
+        # it is guaranteed: canary always, everything once gbn is on.
+        for drop in DROP_PROBS:
+            lcfg = dataclasses.replace(cfg, drop_prob=drop)
+            n = max(2, int(cfg.num_hosts * 0.5))
+            for transport in ("none", "gbn"):
+                for algo, label in ALGOS:
+                    tag = (f"loss/{fabric}/{label}/drop{drop:g}"
+                           f"/{transport}")
+                    _cell(lcfg, algo, label, fabric, n, size, transport,
+                          congestion=False, cells=cells, tag=tag,
+                          require_exact=(transport == "gbn"
+                                         or label == "canary"))
+
+    doc = dict(cells=cells, headline=headline, provenance=provenance())
+    path = os.environ.get("BENCH_TRANSPORT_JSON", "TRANSPORT_RESULTS.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

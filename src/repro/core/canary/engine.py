@@ -36,14 +36,27 @@ EV_RETX = 4           # a=host, c=(app, block, gen)
 EV_FAIL_SWITCH = 5    # a=switch
 EV_LEADER_DONE = 6    # a=leader host, c=(app, block, total)
 EV_JOB_ARRIVE = 7     # a=app (open-loop job arrival; fleet subsystem)
+# Transport-policy events (repro.core.transport). Under the default
+# ``transport="none"`` policy none of these is ever pushed, so the golden
+# replays see the exact pre-transport event stream. PFC pause/resume are a
+# pair: the pause lands one propagation delay after the egress queue crosses
+# its high watermark, the resume at the (closed-form) time the queue drains
+# to the low watermark.
+EV_PFC_PAUSE = 8      # a=host (sender being paused)
+EV_PFC_RESUME = 9     # a=host, c=scheduled resume time (supersede guard)
+EV_RATE_TIMER = 10    # a=host, c=timer epoch (DCQCN rate-increase timer)
+EV_GBN_TIMER = 11     # a=host, c=("p"|"b", flow key, epoch)
 # Staged link arrivals (ARCHITECTURE.md §Performance): ``c`` is a *staging
 # source* (a Link) whose ``inflight`` deque holds ``(t, seq, packet)``
 # entries in FIFO order — one heap entry per busy link instead of one per
 # in-flight packet. The loop pops the head packet, re-arms the link's next
 # head, and dispatches the same handlers as kinds 0/1 with ``c = packet``.
-EV_LINK_ARRIVE_SWITCH = 8  # a=global switch idx, b=in port, c=Link
-EV_LINK_ARRIVE_HOST = 9    # a=host, c=Link
-N_EVENT_KINDS = 10
+# These must stay the HIGHEST kind ids: the run loop detects them with a
+# single ``kind >= EV_LINK_ARRIVE_SWITCH`` compare. Renumbering kinds is
+# golden-safe — heap order is (t, seq) only; kind never orders events.
+EV_LINK_ARRIVE_SWITCH = 12  # a=global switch idx, b=in port, c=Link
+EV_LINK_ARRIVE_HOST = 13    # a=host, c=Link
+N_EVENT_KINDS = 14
 
 Handler = Callable[[int, int, object], None]
 

@@ -38,6 +38,16 @@ _K_FAIL = int(PacketKind.FAIL)
 _K_UNICAST = int(PacketKind.UNICAST_DATA)
 _K_NOISE = int(PacketKind.NOISE)
 
+# Transport-policy verdicts for the pump gate (repro.core.transport.base):
+# ``before_send`` returns one of these sentinels (identity-compared), a float
+# release time, or None to let the packet go. TX_PAUSED parks the packet in
+# ``pending`` with NO pump event scheduled — the policy's resume event must
+# call ``schedule_pump``. TX_ABSORBED means the policy took ownership of the
+# packet (window stall, stale clone); the pump re-fires immediately for the
+# host's next packet.
+TX_PAUSED = object()
+TX_ABSORBED = object()
+
 
 class _HostState:
     __slots__ = ("queue", "pending", "pump_scheduled", "noise_peer",
@@ -60,7 +70,7 @@ class _HostState:
 
 class _LeaderState:
     __slots__ = ("value", "counter", "gen", "restorations", "done",
-                 "last_fail_ns", "pending_done")
+                 "last_fail_ns", "pending_done", "contributed")
 
     def __init__(self) -> None:
         self.value = 0
@@ -70,6 +80,10 @@ class _LeaderState:
         self.done = False
         self.pending_done = False
         self.last_fail_ns = -1e18
+        # go-back-N only: src hosts already merged into the current partial.
+        # Lets saturated-generation resends accumulate without double counts
+        # (under "none" the set stays empty — generation discipline dedups).
+        self.contributed: Set[int] = set()
 
 
 class HostProtocol:
@@ -93,6 +107,11 @@ class HostProtocol:
         self._next_noise_pkt = None
         self._sender_delay = None
         self._noise_prob = sim.cfg.noise_prob
+        # transport policy (None under the default "none" — every hook below
+        # is guarded by one identity check, the trace-recorder pattern)
+        self._transport = None
+        self._fail_resend_bypass = False
+        self._gbn = False  # transport owns block retx (go-back-N recovery)
 
     def finalize(self) -> None:
         """Pre-resolve the strategy/workload callables (both layers are
@@ -102,6 +121,10 @@ class HostProtocol:
         self._on_host_packet = sim.strategy.on_host_packet
         self._next_noise_pkt = sim.workload.next_noise_packet
         self._sender_delay = sim.workload.sender_delay_ns
+        self._transport = sim.transport
+        self._fail_resend_bypass = sim.strategy.fail_resend_bypass
+        self._gbn = self._transport is not None \
+            and self._transport.owns_block_retx
 
     # ------------------------------------------------------------ send pump
     def schedule_pump(self, host: int, t: float) -> None:
@@ -143,7 +166,29 @@ class HostProtocol:
                     return
         else:
             hs.pending = None
+        tp = self._transport
+        if tp is not None:
+            verdict = tp.before_send(host, pkt)
+            if verdict is not None:
+                if verdict is TX_PAUSED:
+                    # parked until the policy's resume event re-pumps; no
+                    # event outstanding, so pump_scheduled must stay False
+                    hs.pending = pkt
+                    return
+                if verdict is TX_ABSORBED:
+                    # policy took the packet (window stall / stale clone);
+                    # immediately try the host's next packet
+                    hs.pump_scheduled = True
+                    self._push(self._engine.now, EV_PUMP, host, 0, None)
+                    return
+                # float: rate-paced — hold the packet until the release time
+                hs.pending = pkt
+                hs.pump_scheduled = True
+                self._push(verdict, EV_PUMP, host, 0, None)
+                return
         nic_free = self._send_from_host(sim, host, pkt)
+        if tp is not None:
+            nic_free = tp.after_send(host, pkt, nic_free)
         hs.pump_scheduled = True
         eng = self._engine
         eng._seq = seq = eng._seq + 1
@@ -159,6 +204,15 @@ class HostProtocol:
         flags[block] = 1
         if sim.trace is not None:
             sim.trace.on_host_complete(host, app, block)
+        tp = self._transport
+        if tp is not None and tp.owns_block_retx:
+            tp.on_block_complete(host, app, block)
+            # memo the reduced value at the leader so later RETX_REQs can be
+            # served even when the completion path bypassed leader_block_done
+            if host == sim.leader_of(app, block):
+                key = (app, block)
+                if key not in self.completed_total:
+                    self.completed_total[key] = value
         if value != sim.expected_total(app, block):
             sim.mismatches += 1
         remaining = sim.app_remaining[app] - 1
@@ -215,6 +269,13 @@ class HostProtocol:
         """The ``EV_ARRIVE_HOST`` handler. Processes the packet, then
         recycles it unless it is a shared multicast object."""
         sim = self.sim
+        tp = self._transport
+        if tp is not None:
+            # CNP/ACK consumption, ECN-echo, go-back-N sequencing. A None
+            # return means the policy consumed (and recycled) the packet.
+            pkt = tp.on_receive(host, pkt)
+            if pkt is None:
+                return
         kind = pkt.kind
         if kind == _K_NOISE:
             self._pool_free(pkt)
@@ -233,7 +294,11 @@ class HostProtocol:
                 if st is None:
                     st = self.leader_state[key] = _LeaderState()
                 gen = pid & _MAX_GEN
-                if not (st.done or st.pending_done or gen != st.gen):
+                if not (st.done or st.pending_done or gen != st.gen) \
+                        and not (self._gbn and pkt.src >= 0
+                                 and pkt.src in st.contributed):
+                    if self._gbn and pkt.src >= 0:
+                        st.contributed.add(pkt.src)
                     st.value += pkt.value
                     st.counter += pkt.counter
                     if sim.trace is not None:
@@ -305,10 +370,18 @@ class HostProtocol:
                 # admission-degraded apps were counted whole at activation
                 sim.app_fallback_blocks[app] = \
                     sim.app_fallback_blocks.get(app, 0) + 1
+        # Generation ids saturate at _MAX_GEN. Under go-back-N the saturated
+        # rounds keep ONE accumulating partial (src-deduped above) instead of
+        # restarting — each host's resend then only has to get through once
+        # ever, so recovery converges at any loss rate. Pre-saturation (and
+        # always under "none") a new generation starts from scratch.
+        if not (self._gbn and newgen == st.gen
+                and (fallback or self._fail_resend_bypass)):
+            st.value = 0
+            st.counter = 0
+            st.restorations = []
+            st.contributed.clear()
         st.gen = newgen
-        st.value = 0
-        st.counter = 0
-        st.restorations = []
         # "the leader broadcasts a failure message" (§3.3) — delivered unicast
         for h in sim.leaders[app]:
             if h == leader:
@@ -325,24 +398,42 @@ class HostProtocol:
         cfg = sim.cfg
         app, block, gen = id_app(pkt.id), id_block(pkt.id), id_gen(pkt.id)
         hkey = (host, app, block)
-        if self.host_gen.get(hkey, 0) >= gen:
+        tp = self._transport
+        gbn = self._gbn
+        prev = self.host_gen.get(hkey, 0)
+        if prev > gen or (prev == gen and not gbn):
+            # under go-back-N a same-generation FAIL re-triggers the resend
+            # (the earlier copy may have been lost; the leader's src dedup
+            # absorbs duplicates) — saturated generations depend on this
             return
         flags = sim.have.get((app, host))
-        if flags is not None and flags[block]:
+        if flags is not None and flags[block] and not gbn:
+            # under go-back-N a completed host still re-contributes: the new
+            # generation's cohort needs every contribution to converge
             return
         self.host_gen[hkey] = gen
         sim.retransmissions += 1
         fallback = pkt.counter == 1 or app in sim.bypass_apps
+        # Plan-driven strategies (static tree) have no per-generation switch
+        # state: a resent cohort routed through the plan waits forever for
+        # the leader's (never resent) leaf contribution. Under a transport
+        # that owns block recovery, resends bypass the fabric aggregation
+        # and sum at the leader host instead.
+        bypass = fallback or (gbn and self._fail_resend_bypass)
         rp = Packet(kind=PacketKind.REDUCE, dest=sim.leader_of(app, block),
                     id=make_id(app, block, gen), counter=1,
                     hosts=len(sim.leaders[app]),
                     value=sim.contribution_of(app, block, host),
-                    bypass=fallback, size_bytes=cfg.mtu_bytes, src=host)
+                    bypass=bypass, size_bytes=cfg.mtu_bytes, src=host)
         if sim.trace is not None:
             sim.trace.on_host_send(host, rp)
         self.hosts[host].queue.append(rp)
-        self._push_timer(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
-                         (app, block, gen))
+        if gbn:
+            if flags is not None and not flags[block]:
+                tp.on_block_sent(host, app, block)
+        else:
+            self._push_timer(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
+                             (app, block, gen))
         self.schedule_pump(host, sim.now)
 
     def handle_retx(self, host: int, _b: int, c: object) -> None:
@@ -373,6 +464,25 @@ class HostProtocol:
         self.hosts[host].queue.append(req)
         self._push_timer(sim.now + cfg.retx_timeout_ns, EV_RETX, host, 0,
                          (app, block, gen))
+        self.schedule_pump(host, sim.now)
+
+    def gbn_request_block(self, host: int, app: int, block: int) -> None:
+        """Re-request a block result from its leader on behalf of the
+        go-back-N block flow. Unlike :meth:`host_retx_check` this never arms
+        an ``EV_RETX`` timer — the transport's per-flow timer owns the retry
+        cadence and calls back here each round."""
+        sim = self.sim
+        if sim.apps_active == 0:
+            return
+        flags = sim.have.get((app, host))
+        if flags is None or flags[block]:
+            return
+        gen = self.host_gen.get((host, app, block), 0)
+        sim.retransmissions += 1
+        req = Packet(kind=PacketKind.RETX_REQ, dest=sim.leader_of(app, block),
+                     id=make_id(app, block, gen),
+                     size_bytes=sim.cfg.header_bytes + 16, src=host)
+        self.hosts[host].queue.append(req)
         self.schedule_pump(host, sim.now)
 
 

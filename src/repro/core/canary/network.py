@@ -159,6 +159,9 @@ class FatTree(Topology):
         start = bu if bu > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
+        tp = self._transport
+        if tp is not None:
+            tp.on_egress(link, pkt, busy - now)
         if self._dp and self._rngr() < self._dp:
             sim.dropped += 1
             if not pkt.multicast:
@@ -199,6 +202,9 @@ class FatTree(Topology):
             start = bu if bu > now else now
             link.busy_until = busy = start + size / link.bytes_per_ns
             link.bytes_sent += size
+            tp = self._transport
+            if tp is not None:
+                tp.on_egress(link, pkt, busy - now)
             if self._dp and self._rngr() < self._dp:
                 sim.dropped += 1
                 if not pkt.multicast:
@@ -219,6 +225,9 @@ class FatTree(Topology):
             start = bu if bu > now else now
             link.busy_until = busy = start + size / link.bytes_per_ns
             link.bytes_sent += size
+            tp = self._transport
+            if tp is not None:
+                tp.on_egress(link, pkt, busy - now)
             if self._dp and self._rngr() < self._dp:
                 sim.dropped += 1
                 if not pkt.multicast:
@@ -297,6 +306,9 @@ class FatTree(Topology):
         start = bu if bu > now else now
         link.busy_until = busy = start + size / link.bytes_per_ns
         link.bytes_sent += size
+        tp = self._transport
+        if tp is not None:
+            tp.on_egress(link, pkt, busy - now)
         if self._dp and self._rngr() < self._dp:
             sim.dropped += 1
             if not pkt.multicast:
@@ -350,6 +362,9 @@ class FatTree(Topology):
         start = bu if bu > now else now
         link.busy_until = busy = start + size / link.bytes_per_ns
         link.bytes_sent += size
+        tp = self._transport
+        if tp is not None:
+            tp.on_egress(link, pkt, busy - now)
         if self._dp and self._rngr() < self._dp:
             sim.dropped += 1
             if not pkt.multicast:

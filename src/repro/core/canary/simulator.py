@@ -33,8 +33,9 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from . import network as _network  # noqa: F401  (registers "fat_tree")
 from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
-                     EV_JOB_ARRIVE, EV_LEADER_DONE, EV_LINK_ARRIVE_HOST,
-                     EV_LINK_ARRIVE_SWITCH, EV_PUMP, EV_RETX, EV_TIMER,
+                     EV_GBN_TIMER, EV_JOB_ARRIVE, EV_LEADER_DONE,
+                     EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH, EV_PFC_PAUSE,
+                     EV_PFC_RESUME, EV_PUMP, EV_RATE_TIMER, EV_RETX, EV_TIMER,
                      EventLoop, N_EVENT_KINDS)
 from .hostproto import HostProtocol
 from .switch import SwitchLayer, make_strategy
@@ -88,12 +89,22 @@ class Simulator:
         self.switch = SwitchLayer(self, self.net.num_switches)
         self.hostproto = HostProtocol(self, cfg.num_hosts)
         self.workload = CongestionWorkload(self, noise_hosts)
+        # transport policy (repro.core.transport): None under the default
+        # "none", so every hook site reduces to one identity check. Deferred
+        # import — the transport package imports canary modules, never the
+        # other way around, and the core import graph stays jax-free.
+        self.transport = None
+        if cfg.transport and cfg.transport != "none":
+            from ..transport import make_transport
+            self.transport = make_transport(cfg.transport, self)
         self.strategy = make_strategy(self.algo, self)
         # finalize: every layer pre-resolves its per-packet callables now
         # that the full layer graph exists (ARCHITECTURE.md §Performance)
         self.switch.finalize()
         self.hostproto.finalize()
         self.net.bind(self)
+        if self.transport is not None:
+            self.transport.finalize()
 
         # multi-tenant fleet state (repro.core.fleet). With no admission
         # controller everything below stays empty and the dataplane behaves
@@ -125,6 +136,7 @@ class Simulator:
         self.retransmissions = 0
         self.fallbacks = 0
         self.dropped = 0
+        self.dropped_failed = 0  # subset of ``dropped``: failed-switch sink
         self.completed_blocks = 0
 
         # per-job precomputation (hot-path constants; see _setup_jobs)
@@ -314,6 +326,12 @@ class Simulator:
         handlers[EV_FAIL_SWITCH] = self._handle_fail_switch
         handlers[EV_LEADER_DONE] = self.hostproto.handle_leader_done
         handlers[EV_JOB_ARRIVE] = self._handle_job_arrive
+        tp = self.transport
+        if tp is not None:
+            handlers[EV_PFC_PAUSE] = tp.handle_pfc_pause
+            handlers[EV_PFC_RESUME] = tp.handle_pfc_resume
+            handlers[EV_RATE_TIMER] = tp.handle_rate_timer
+            handlers[EV_GBN_TIMER] = tp.handle_gbn_timer
         # the event loop allocates millions of short-lived tuples/packets and
         # creates no reference cycles; pausing the cyclic GC for the drain is
         # worth ~10-15% wall time (state restored on every exit path)
@@ -335,6 +353,14 @@ class Simulator:
             dur = self.app_done_ns.get(app, self.now) - self.job_submit_ns[app]
             goodput[app] = (job.data_bytes * 8.0) / dur if dur > 0 else 0.0
         maxdesc = max(self.switch.desc_high) if self.switch.desc_high else 0
+        # per-cause drop split + transport telemetry (additive SimResult
+        # fields: the golden contract pins only the pre-existing ones)
+        tele = self.transport.telemetry() if self.transport is not None else {}
+        host_rates = tele.pop("host_rate_gbps", {})
+        drop_causes = {"wire": self.dropped - self.dropped_failed,
+                       "switch_fail": self.dropped_failed}
+        if "gbn_ooo" in tele:
+            drop_causes["gbn_ooo_discard"] = tele["gbn_ooo"]
         return SimResult(
             duration_ns=end,
             start_ns=0.0,
@@ -358,4 +384,8 @@ class Simulator:
             job_admitted={a: a not in self.bypass_apps for a in self.jobs},
             app_fallback_blocks=dict(self.app_fallback_blocks),
             tenant_of=dict(self.tenant_of),
+            transport=str(cfg.transport),
+            drop_causes=drop_causes,
+            transport_stats=tele,
+            host_rate_gbps=host_rates,
         )

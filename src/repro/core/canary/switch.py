@@ -86,13 +86,15 @@ class SwitchLayer:
         sim = self.sim
         if self.failed[sw]:
             sim.dropped += 1
+            sim.dropped_failed += 1
             if not pkt.multicast:
                 self._pool_free(pkt)
             return
         kind = pkt.kind
         if kind >= _K_RETX_REQ:
-            # _PASSTHROUGH kinds (RETX_REQ..RING, a contiguous id range:
-            # one compare for the most common arrivals): pure forwarding
+            # _PASSTHROUGH kinds (RETX_REQ..ACK, a contiguous id range:
+            # one compare for the most common arrivals): pure forwarding —
+            # transport control packets (CNP/ACK) ride this branch too
             self._fwd_host(sim, sw, pkt)
         elif kind == _K_REDUCE:
             self._on_reduce(sw, in_port, pkt)
@@ -182,6 +184,12 @@ class AggregationStrategy:
     # the fleet admission controller budgets (§3.2.2). Host-based strategies
     # (RING) keep the default and are always admitted without a quota.
     uses_switch_memory = False
+    # True when generation-bumped FAIL resends must bypass in-network
+    # aggregation (plan-driven strategies: a static plan has no notion of a
+    # partial cohort, so a resent generation routed through it deadlocks on
+    # the leader's never-resent leaf contribution). Read by
+    # HostProtocol.host_handle_fail when a transport policy owns block retx.
+    fail_resend_bypass = False
 
     def __init__(self, sim):
         self.sim = sim
@@ -194,6 +202,7 @@ class AggregationStrategy:
         self._fwd_host = sim.net.forward_toward_host
         self._pool = sim.pool
         self._trace = sim.trace
+        self._transport = sim.transport
         self._mtu = cfg.mtu_bytes
         self._retx_timeout = cfg.retx_timeout_ns
         # per-app send constants, built lazily on first pump (after
@@ -267,7 +276,11 @@ class AggregationStrategy:
                 pkt.src = host
                 if self._trace is not None:
                     self._trace.on_host_send(host, pkt)
-                if self.uses_retx_timers or degraded:
+                tp = self._transport
+                if tp is not None and tp.owns_block_retx:
+                    # go-back-N block flows supersede the whole-block timer
+                    tp.on_block_sent(host, app, nxt)
+                elif self.uses_retx_timers or degraded:
                     # loss detection is part of the Canary protocol (§3.3);
                     # static-tree systems restart from scratch instead.
                     self._push_timer(self._engine.now + self._retx_timeout,
@@ -439,6 +452,9 @@ class CanaryStrategy(AggregationStrategy):
         out.hosts = desc.hosts
         out.value = desc.value
         out.size_bytes = self._mtu
+        # switch-originated aggregate: no single culprit sender (a stale
+        # pooled src would misdirect transport CNPs/PFC pauses)
+        out.src = -1
         if self._trace is not None:
             self._trace.on_desc_flush(sw, desc, out, reason)
         self._fwd_host(sim, sw, out)
@@ -470,6 +486,7 @@ class StaticTreeStrategy(AggregationStrategy):
     any registered topology."""
 
     uses_switch_memory = True
+    fail_resend_bypass = True
 
     def __init__(self, sim):
         super().__init__(sim)
@@ -536,6 +553,7 @@ class StaticTreeStrategy(AggregationStrategy):
             out.hosts = pkt.hosts
             out.value = desc.value
             out.size_bytes = self._mtu
+            out.src = -1  # switch-originated aggregate (see CanaryStrategy)
             if trace is not None:
                 trace.on_desc_flush(sw, desc, out, "complete")
             sim.net.static_send_up(sim, sw, root, out)

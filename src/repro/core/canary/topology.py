@@ -98,6 +98,12 @@ class Topology:
     # built standalone (tests, shape checks) stay usable for routing/shape
     # queries; driving ``tx_*`` requires a bound facade (or stub).
     _pool_free = None
+    # Transport-policy egress hook (repro.core.transport): every tx site
+    # calls ``_transport.on_egress(link, pkt, qdelay_ns)`` after serializing
+    # — the ECN-marking / PFC-watermark observation point. None (the default
+    # ``transport="none"`` policy, and stub sims without the attribute)
+    # costs one identity check per send and nothing else.
+    _transport = None
 
     def bind(self, sim) -> None:
         """Pre-resolve per-run callables (ARCHITECTURE.md §Performance).
@@ -105,6 +111,7 @@ class Topology:
         layers exist. Subclasses extend this to bind their own hot-path
         state (the engine for inline pushes, the RNG draw)."""
         self._pool_free = sim.pool.free
+        self._transport = getattr(sim, "transport", None)
 
     @classmethod
     def config_num_switches(cls, cfg: SimConfig) -> int:
@@ -156,6 +163,9 @@ class Topology:
         start = link.busy_until if link.busy_until > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
+        tp = self._transport
+        if tp is not None:
+            tp.on_egress(link, pkt, busy - now)
         if sim._drop_prob and sim._rng_random() < sim._drop_prob:
             sim.dropped += 1
             if not pkt.multicast:
@@ -176,6 +186,9 @@ class Topology:
         start = link.busy_until if link.busy_until > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
+        tp = self._transport
+        if tp is not None:
+            tp.on_egress(link, pkt, busy - now)
         if sim._drop_prob and sim._rng_random() < sim._drop_prob:
             sim.dropped += 1
             if not pkt.multicast:

@@ -35,6 +35,11 @@ class PacketKind(enum.IntEnum):
     UNICAST_DATA = 5 # leader -> host retransmitted reduced block (§3.3)
     NOISE = 6        # background congestion traffic (random uniform, §5.2)
     RING = 7         # host-based ring allreduce traffic (baseline, §5.2)
+    # Transport-policy control traffic (repro.core.transport). Ids >= 8 fall
+    # in the switch dataplane's contiguous pass-through range (kind >=
+    # RETX_REQ): switches forward them toward ``dest`` untouched.
+    CNP = 8          # DCQCN congestion-notification packet (receiver -> sender)
+    ACK = 9          # go-back-N cumulative acknowledgement (receiver -> sender)
 
 
 class _StrEnum(str, enum.Enum):
@@ -89,6 +94,11 @@ class Packet:
     # SimConfig.trace is on: the TraceNode id whose aggregate this packet
     # carries. Observation-only — never read by the protocol layers.
     trace_node: int = -1
+    # Transport-policy fields (repro.core.transport). Under the default
+    # ``none`` policy both stay at their defaults for a packet's whole life.
+    ecn: bool = False         # ECN congestion-experienced mark (dcqcn, RED)
+    seq: int = -1             # go-back-N per-flow sequence number (gbn; ACK:
+                              # the cumulative acknowledged sequence)
 
 
 class PacketPool:
@@ -140,11 +150,17 @@ class PacketPool:
     def free(self, pkt: "Packet") -> None:
         free = self._free
         if len(free) < self.max_free:
-            # minimal reset — see the class docstring for the field audit
+            # minimal reset — see the class docstring for the field audit.
+            # ``ecn``/``seq`` join it: a stale ECN mark would fabricate CNPs
+            # on the next life, a stale seq would make an unsequenced packet
+            # look go-back-N-tracked (both read through ``is not default``
+            # guards in repro.core.transport).
             pkt.bypass = False
             pkt.switch_addr = -1
             pkt.port_stamp = -1
             pkt.trace_node = -1
+            pkt.ecn = False
+            pkt.seq = -1
             self.freed += 1
             free.append(pkt)
 
@@ -274,6 +290,37 @@ class SimConfig:
     noise_delay_ns: float = 1000.0
     noise_msg_bytes: int = 65536      # congestion flows: message size between re-picks
     leader_aggregate_ns: float = 1000.0  # host-side per-block leader processing (§3.2.2 "r")
+
+    # -- transport policy (repro.core.transport) -------------------------------
+    # Registry key: "none" (default; bit-identical to the pre-transport
+    # engine), "gbn" (go-back-N recovery: per-flow sequence numbers +
+    # cumulative ACKs) or "dcqcn" (ECN/RED marking, CNP notification, DCQCN
+    # rate control, PFC pause). Knobs are FLAT fields (not a nested
+    # dataclass) so sweep work items survive the dataclasses.asdict ->
+    # SimConfig(**cfg) round trip.
+    transport: str = "none"
+    # ECN / RED marking at egress queues (dcqcn): mark probability ramps from
+    # 0 at ecn_kmin_bytes of backlog to ecn_pmax at ecn_kmax_bytes, then 1.
+    ecn_kmin_bytes: int = 16384
+    ecn_kmax_bytes: int = 65536
+    ecn_pmax: float = 0.2
+    cnp_interval_ns: float = 5.0e4    # min gap between CNPs per (receiver, sender)
+    # DCQCN sender state machine (rate decrease on CNP; timer-driven fast
+    # recovery then additive increase).
+    dcqcn_g: float = 1.0 / 16.0
+    dcqcn_rai_gbps: float = 5.0       # additive-increase step
+    dcqcn_timer_ns: float = 3.0e5     # rate-increase timer period
+    dcqcn_min_rate_gbps: float = 1.0
+    dcqcn_f: int = 5                  # fast-recovery stages before additive increase
+    # PFC priority pause (dcqcn): pause the culprit sender when an egress
+    # queue crosses pfc_pause_bytes; resume when it drains to pfc_resume_bytes.
+    pfc_pause_bytes: int = 98304      # Xoff (75% of the default 128 KiB buffer)
+    pfc_resume_bytes: int = 32768     # Xon
+    # go-back-N (gbn): sender window in packets (point-to-point flows) /
+    # blocks (aggregated flows), retransmission timeout, cumulative-ACK cadence.
+    gbn_window: int = 32
+    gbn_timeout_ns: float = 2.0e5
+    gbn_ack_every: int = 1
 
     # -- experiment ------------------------------------------------------------
     seed: int = 0
@@ -477,6 +524,19 @@ class SimResult:
     job_admitted: Dict[int, bool] = field(default_factory=dict)    # False: host-based fallback
     app_fallback_blocks: Dict[int, int] = field(default_factory=dict)
     tenant_of: Dict[int, int] = field(default_factory=dict)
+    # -- transport telemetry (repro.core.transport) ---------------------------
+    # Additive diagnostics like the fleet fields above. ``drop_causes`` splits
+    # the single ``dropped_packets`` total by cause ("wire": iid link loss,
+    # "switch_fail": arrivals at a failed switch, "gbn_ooo": go-back-N
+    # out-of-order endpoint discards — not part of dropped_packets, which
+    # counts in-network losses only). ``transport_stats`` carries the active
+    # policy's counters (ecn_marks, cnps, rate_cuts, pfc_pauses,
+    # pfc_pause_ns, gbn_retx, gbn_acks, gbn_ooo). ``host_rate_gbps`` is the
+    # final DCQCN sending rate of every throttled sender.
+    transport: str = "none"
+    drop_causes: Dict[str, int] = field(default_factory=dict)
+    transport_stats: Dict[str, float] = field(default_factory=dict)
+    host_rate_gbps: Dict[int, float] = field(default_factory=dict)
 
     def jct_ns(self, app: int) -> float:
         """Job completion time: finish minus submit (includes deferral wait)."""
@@ -488,7 +548,19 @@ class SimResult:
             f"app{a}[done={self.job_finish_ns.get(a, float('nan'))/1e3:.1f}us "
             f"fb={self.app_fallback_blocks.get(a, 0)}]"
             for a in sorted(self.goodput_gbps))
+        dc = self.drop_causes
+        drops = (f"drops[wire={dc.get('wire', 0)}"
+                 f",switch={dc.get('switch_fail', 0)}]")
+        tseg = ""
+        if self.transport != "none":
+            ts = self.transport_stats
+            tseg = (f" tp={self.transport}"
+                    f"[ecn={int(ts.get('ecn_marks', 0))}"
+                    f" cnp={int(ts.get('cnps', 0))}"
+                    f" pfc={int(ts.get('pfc_pauses', 0))}"
+                    f" gbn_retx={int(ts.get('gbn_retx', 0))}"
+                    f" ooo={int(ts.get('gbn_ooo', 0))}]")
         return (f"t={self.duration_ns/1e3:.1f}us {gp} correct={self.correct} "
                 f"stragglers={self.stragglers} collisions={self.collisions} "
                 f"retx={self.retransmissions} maxdesc={self.max_descriptors_per_switch} "
-                f"{apps}")
+                f"{drops}{tseg} {apps}")

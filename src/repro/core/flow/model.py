@@ -106,6 +106,12 @@ def _noise_split(q_leaf: int, q_total: int) -> float:
 def lower_item(item: dict) -> FlowCell:
     """Lower one sweep work item into a :class:`FlowCell`."""
     cfg = SimConfig(**item["cfg"])
+    if cfg.transport != "none":
+        # the flow model has no packets, queues or timers — silently ignoring
+        # a transport policy would report fidelity it doesn't have
+        raise ValueError(
+            f"the flow backend cannot model transport={cfg.transport!r}; "
+            "use backend='packet' for transport-policy experiments")
     if "lb" in item:
         cfg = dataclasses.replace(cfg, lb=item["lb"])
     algo = item["algo"]

@@ -22,8 +22,8 @@ import pytest
 
 from golden_cases import CASES, build_simulator, load_goldens, result_to_jsonable
 from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
-from repro.core.canary.engine import (EV_PUMP, EV_RETX, EV_TIMER, EventLoop,
-                                      N_EVENT_KINDS)
+from repro.core.canary.engine import (EV_LINK_ARRIVE_SWITCH, EV_PUMP, EV_RETX,
+                                      EV_TIMER, EventLoop, N_EVENT_KINDS)
 from repro.core.canary.types import PacketPool
 
 
@@ -192,12 +192,13 @@ def test_staged_link_arrivals_keep_one_heap_entry_per_busy_link():
             orig(self, handlers, 5000)  # partial drain (hits the budget)
         except RuntimeError:
             pass
-        staged_links = [e[5] for e in self.heap if e[2] >= 8]
+        staged_links = [e[5] for e in self.heap
+                        if e[2] >= EV_LINK_ARRIVE_SWITCH]
         assert staged_links, "expected staged link arrivals mid-run"
         assert len(staged_links) == len(set(map(id, staged_links))), \
             "a busy link must have exactly one heap entry"
         for e in self.heap:
-            if e[2] >= 8:
+            if e[2] >= EV_LINK_ARRIVE_SWITCH:
                 link = e[5]
                 assert link.inflight, "armed link with empty FIFO"
                 head = link.inflight[0]

@@ -1,0 +1,108 @@
+"""Leader duplicate-retx suppression.
+
+When several hosts notice the same lost block they all unicast RETX_REQ to
+the leader. Only the first may open a failure round; the rest must be
+debounced for ``retx_timeout_ns / 2`` (``leader_handle_retx``), otherwise
+every duplicate request would bump the generation id and orphan the resends
+already in flight for the round that is being recovered.
+"""
+import pytest
+
+from repro.core.canary import Algo, AllreduceJob, SimConfig, Simulator
+from repro.core.canary.types import PacketKind
+
+
+def _sim(**kw) -> Simulator:
+    base = dict(num_leaves=4, hosts_per_leaf=4, num_spines=4, table_size=4096,
+                seed=11, retx_timeout_ns=5e4)
+    base.update(kw)
+    return Simulator(SimConfig(**base),
+                     [AllreduceJob(0, list(range(8)), 32768)],
+                     algo=Algo.CANARY)
+
+
+def _fails_queued(sim) -> int:
+    hp = sim.hostproto
+    return sum(1 for hs in hp.hosts
+               for p in hs.queue if p.kind == PacketKind.FAIL)
+
+
+def test_first_retx_request_opens_a_failure_round():
+    sim = _sim()
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.leader_handle_retx(leader, 0, 3, requester=1)
+    st = hp.leader_state[(0, 3)]
+    assert st.gen == 1
+    assert st.last_fail_ns == sim.now
+    # FAIL fans out to every other participant of the app
+    assert _fails_queued(sim) == len(sim.leaders[0]) - 1
+
+
+def test_duplicate_requests_inside_half_timeout_are_suppressed():
+    sim = _sim()
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.leader_handle_retx(leader, 0, 3, requester=1)
+    baseline = _fails_queued(sim)
+    # everyone else piles on just before the window closes
+    sim.engine.now = sim.cfg.retx_timeout_ns / 2 - 1.0
+    for requester in (2, 4, 6):
+        hp.leader_handle_retx(leader, 0, 3, requester=requester)
+    st = hp.leader_state[(0, 3)]
+    assert st.gen == 1, "duplicate request must not bump the generation"
+    assert st.last_fail_ns == 0.0, "debounced request must not extend window"
+    assert _fails_queued(sim) == baseline, "no second FAIL fan-out"
+
+
+def test_request_at_window_boundary_opens_a_new_round():
+    sim = _sim()
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.leader_handle_retx(leader, 0, 3, requester=1)
+    baseline = _fails_queued(sim)
+    sim.engine.now = sim.cfg.retx_timeout_ns / 2  # window closed (>=)
+    hp.leader_handle_retx(leader, 0, 3, requester=2)
+    st = hp.leader_state[(0, 3)]
+    assert st.gen == 2
+    assert st.last_fail_ns == sim.engine.now
+    assert _fails_queued(sim) == 2 * baseline
+
+
+def test_debounce_window_is_per_block():
+    """Block 7's first request must not be absorbed by block 3's window."""
+    sim = _sim()
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.leader_handle_retx(leader, 0, 3, requester=1)
+    hp.leader_handle_retx(leader, 0, 7, requester=1)
+    assert hp.leader_state[(0, 3)].gen == 1
+    assert hp.leader_state[(0, 7)].gen == 1
+
+
+def test_window_scales_with_configured_timeout():
+    sim = _sim(retx_timeout_ns=2e5)
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.leader_handle_retx(leader, 0, 0, requester=1)
+    sim.engine.now = 9.9e4  # inside 1e5 = retx_timeout_ns / 2
+    hp.leader_handle_retx(leader, 0, 0, requester=2)
+    assert hp.leader_state[(0, 0)].gen == 1
+    sim.engine.now = 1.0e5
+    hp.leader_handle_retx(leader, 0, 0, requester=2)
+    assert hp.leader_state[(0, 0)].gen == 2
+
+
+def test_completed_block_bypasses_the_round_machinery():
+    """A request for an already-reduced block answers with unicast data and
+    never touches generation state (broadcast-phase loss, §3.3)."""
+    sim = _sim()
+    hp = sim.hostproto
+    leader = sim.leaders[0][0]
+    hp.completed_total[(0, 3)] = 12345
+    hp.leader_handle_retx(leader, 0, 3, requester=5)
+    assert (0, 3) not in hp.leader_state
+    assert _fails_queued(sim) == 0
+    uni = [p for p in hp.hosts[leader].queue
+           if p.kind == PacketKind.UNICAST_DATA]
+    assert len(uni) == 1 and uni[0].dest == 5 and uni[0].value == 12345

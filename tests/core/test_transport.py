@@ -1,0 +1,264 @@
+"""Contracts for the pluggable transport subsystem (``repro.core.transport``).
+
+Four layers of guarantees, mirroring ARCHITECTURE.md §Transport:
+
+* **Registry contract** — transports resolve by string key exactly like
+  algorithms/topologies/backends; ``"none"`` maps to no policy object at
+  all (the hot path carries zero transport overhead by default), unknown
+  names fail loudly with the valid set.
+* **Goldens-unaffected guarantee** — every golden scenario replays
+  bit-for-bit with ``transport="none"`` spelled out explicitly.
+* **Go-back-N exactness** — with ``transport="gbn"`` every algorithm's
+  reduction is exact under packet loss, on both fabrics (property-tested
+  across algo x drop_prob x seed).
+* **DCQCN observability** — a congested run produces ECN marks, CNPs, rate
+  cuts and PFC pauses in ``SimResult.transport_stats``; throttled hosts
+  surface in ``host_rate_gbps``; per-cause drop counters reconcile with the
+  global drop total; everything is deterministic per seed.
+"""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - CI always has hypothesis
+    HAVE_HYP = False
+
+from golden_cases import CASES, load_goldens, result_to_jsonable
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               scaled_config, three_tier_config)
+from repro.core.transport import TRANSPORTS, make_transport, \
+    register_transport
+from repro.core.transport.base import TransportPolicy
+
+
+def _run(cfg, algo=Algo.CANARY, n_hosts=8, data_bytes=32768, noise=None):
+    jobs = [AllreduceJob(0, list(range(n_hosts)), data_bytes)]
+    sim = Simulator(cfg, jobs, algo=algo, noise_hosts=noise)
+    return sim.run()
+
+
+# --------------------------------------------------------------------------
+# Registry contract
+# --------------------------------------------------------------------------
+def test_registry_has_builtin_policies():
+    assert set(TRANSPORTS) >= {"gbn", "dcqcn"}
+    assert "none" not in TRANSPORTS  # "none" is the absence of a policy
+
+
+def test_make_transport_none_returns_no_policy():
+    assert make_transport("none", sim=None) is None
+
+
+def test_make_transport_unknown_name_lists_valid_set():
+    with pytest.raises(ValueError) as ei:
+        make_transport("quic", sim=None)
+    msg = str(ei.value)
+    assert "quic" in msg
+    for name in ("none", "gbn", "dcqcn"):
+        assert name in msg
+
+
+def test_register_transport_decorator_round_trips():
+    @register_transport("test_noop")
+    class _Noop(TransportPolicy):
+        name = "test_noop"
+
+    try:
+        assert TRANSPORTS["test_noop"] is _Noop
+        cfg = SimConfig(num_leaves=2, hosts_per_leaf=2, num_spines=2,
+                        table_size=64, transport="test_noop")
+        res = _run(cfg, n_hosts=4, data_bytes=8192)
+        assert res.correct and res.transport == "test_noop"
+    finally:
+        del TRANSPORTS["test_noop"]
+
+
+def test_simulator_rejects_unknown_transport():
+    cfg = SimConfig(num_leaves=2, hosts_per_leaf=2, num_spines=2,
+                    table_size=64, transport="quic")
+    with pytest.raises(ValueError, match="quic"):
+        Simulator(cfg, [AllreduceJob(0, [0, 1, 2, 3], 8192)],
+                  algo=Algo.CANARY)
+
+
+# --------------------------------------------------------------------------
+# Goldens-unaffected guarantee
+# --------------------------------------------------------------------------
+def test_goldens_bit_identical_under_explicit_none():
+    """All 15 goldens with transport="none" spelled out — the default path
+    and the explicit path must be the same path."""
+    import golden_cases
+    goldens = load_goldens()
+    for name in sorted(CASES):
+        cfg_kw, jobs_spec, algo, n_trees, noise = CASES[name]
+        cfg = dataclasses.replace(golden_cases._cfg(**cfg_kw),
+                                  transport="none")
+        sim = Simulator(cfg, golden_cases._jobs(jobs_spec), algo=algo,
+                        n_trees=n_trees, noise_hosts=noise)
+        assert sim.transport is None, "no policy object on the default path"
+        got = result_to_jsonable(sim.run())
+        assert got == goldens[name], \
+            f"golden {name!r} diverged under transport='none'"
+
+
+# --------------------------------------------------------------------------
+# Go-back-N exactness under loss
+# --------------------------------------------------------------------------
+def _lossy_cfg(topology, drop, seed=5, **kw):
+    base = dict(drop_prob=drop, retx_timeout_ns=5e4, seed=seed,
+                transport="gbn", max_events=30_000_000)
+    base.update(kw)
+    if topology == "three_tier":
+        return three_tier_config(**base)
+    return scaled_config(4, **base)
+
+
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE, Algo.RING])
+def test_gbn_exact_under_loss_both_fabrics(topology, algo):
+    res = _run(_lossy_cfg(topology, 0.01), algo=algo, data_bytes=65536)
+    assert res.correct, f"{algo} inexact under loss with gbn on {topology}"
+    assert res.dropped_packets > 0, "cell must actually exercise loss"
+    assert res.transport == "gbn"
+
+
+def test_gbn_ring_recovers_via_sequence_numbers():
+    """RING runs on raw unicast flows — recovery must come from the gbn
+    machinery itself (ACKs, timer retransmits, in-order delivery), not from
+    the leader FAIL protocol (ring has none)."""
+    res = _run(_lossy_cfg("fat_tree", 0.02), algo=Algo.RING,
+               data_bytes=65536)
+    ts = res.transport_stats
+    assert res.correct
+    assert ts["gbn_acks"] > 0
+    assert ts["gbn_retx"] > 0, "drops at 2% must trigger gbn retransmits"
+    assert res.drop_causes["gbn_ooo_discard"] == ts["gbn_ooo"]
+
+
+def test_gbn_exact_with_noise_and_loss():
+    cfg = _lossy_cfg("fat_tree", 0.01)
+    res = _run(cfg, algo=Algo.CANARY, n_hosts=8, data_bytes=65536,
+               noise=list(range(8, 16)))
+    assert res.correct and res.dropped_packets > 0
+
+
+def _assert_gbn_exact(algo, drop, seed):
+    res = _run(_lossy_cfg("fat_tree", drop, seed=seed), algo=algo,
+               data_bytes=32768)
+    assert res.correct, (f"inexact: algo={algo} drop={drop} seed={seed} "
+                         f"retx={res.retransmissions}")
+
+
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE, Algo.RING])
+@pytest.mark.parametrize("drop,seed", [(0.005, 1), (0.02, 9)])
+def test_gbn_reduction_exact_pinned_grid(algo, drop, seed):
+    """The acceptance property on a pinned sample: any algorithm, any loss
+    rate, any seed — the reduction is exact once go-back-N is on."""
+    _assert_gbn_exact(algo, drop, seed)
+
+
+if HAVE_HYP:
+    @settings(max_examples=15, deadline=None)
+    @given(algo=st.sampled_from([Algo.CANARY, Algo.STATIC_TREE, Algo.RING]),
+           drop=st.sampled_from([0.002, 0.005, 0.01, 0.02]),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    def test_gbn_reduction_exact_property(algo, drop, seed):
+        """Hypothesis widens the pinned grid across the full seed space."""
+        _assert_gbn_exact(algo, drop, seed)
+
+
+def test_gbn_determinism():
+    a = result_to_jsonable(_run(_lossy_cfg("fat_tree", 0.01), Algo.RING,
+                                data_bytes=65536))
+    b = result_to_jsonable(_run(_lossy_cfg("fat_tree", 0.01), Algo.RING,
+                                data_bytes=65536))
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# DCQCN observability
+# --------------------------------------------------------------------------
+def _congested_dcqcn(algo=Algo.CANARY, **kw):
+    base = dict(seed=13, transport="dcqcn", noise_prob=0.9,
+                noise_delay_ns=100.0)
+    base.update(kw)
+    cfg = scaled_config(4, **base)
+    return _run(cfg, algo=algo, n_hosts=8, data_bytes=131072,
+                noise=list(range(8, cfg.num_hosts)))
+
+
+def test_dcqcn_marks_cnps_and_rate_cuts_under_congestion():
+    res = _congested_dcqcn()
+    ts = res.transport_stats
+    assert res.correct
+    assert ts["ecn_marks"] > 0, "congested egress queues must RED-mark"
+    assert ts["cnps"] > 0, "marked deliveries must echo CNPs"
+    assert ts["rate_cuts"] > 0, "CNPs must cut sender rates"
+
+
+def test_dcqcn_throttles_hosts_below_line_rate():
+    res = _congested_dcqcn()
+    assert res.host_rate_gbps, "rate-limited hosts must surface telemetry"
+    line_gbps = scaled_config(4).link_gbps
+    for host, rate in res.host_rate_gbps.items():
+        assert 0 < rate < line_gbps
+
+
+def test_dcqcn_pfc_pauses_fire_and_resolve():
+    res = _congested_dcqcn(pfc_pause_bytes=8192, pfc_resume_bytes=4096)
+    ts = res.transport_stats
+    assert res.correct
+    assert ts["pfc_pauses"] > 0
+    assert ts["pfc_pause_ns"] > 0
+    # paused time is bounded by the run: every pause eventually resumed
+    assert ts["pfc_pause_ns"] < res.duration_ns * res.transport_stats.get(
+        "pfc_pauses", 1)
+
+
+def test_dcqcn_exact_on_three_tier():
+    cfg = three_tier_config(seed=13, transport="dcqcn", noise_prob=0.9,
+                            noise_delay_ns=100.0)
+    res = _run(cfg, algo=Algo.STATIC_TREE, n_hosts=8, data_bytes=65536,
+               noise=list(range(8, cfg.num_hosts)))
+    assert res.correct
+    assert res.transport_stats["ecn_marks"] > 0
+
+
+def test_dcqcn_determinism():
+    a = result_to_jsonable(_congested_dcqcn())
+    b = result_to_jsonable(_congested_dcqcn())
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# Telemetry plumbing (per-cause drops, summary lines)
+# --------------------------------------------------------------------------
+def test_drop_causes_reconcile_with_global_counter():
+    res = _run(_lossy_cfg("fat_tree", 0.01), algo=Algo.RING,
+               data_bytes=65536)
+    dc = res.drop_causes
+    assert dc["wire"] + dc["switch_fail"] == res.dropped_packets
+    assert dc["switch_fail"] == 0
+
+
+def test_drop_causes_attribute_switch_failures():
+    cfg = scaled_config(4, switch_fail_ns=2000.0, failed_switch=5,
+                        retx_timeout_ns=5e4, seed=3)
+    res = _run(cfg, algo=Algo.CANARY, n_hosts=10, data_bytes=32768)
+    dc = res.drop_causes
+    assert res.correct
+    assert dc["switch_fail"] > 0, "failed-switch sinks must be attributed"
+    assert dc["wire"] + dc["switch_fail"] == res.dropped_packets
+
+
+def test_summary_carries_drop_causes_and_transport_counters():
+    res = _congested_dcqcn()
+    s = res.summary()
+    assert "drops[wire=" in s and "switch=" in s
+    assert "tp=dcqcn[" in s and "ecn=" in s and "cnp=" in s
+    none_s = _run(scaled_config(4), n_hosts=8).summary()
+    assert "tp=" not in none_s, "default path stays free of transport noise"

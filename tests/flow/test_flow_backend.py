@@ -95,6 +95,18 @@ def test_goodput_is_data_over_runtime(topology):
     assert gp == pytest.approx(cell.data_bits / t_ns)  # bits/ns == Gbps
 
 
+@pytest.mark.parametrize("transport", ["gbn", "dcqcn"])
+def test_flow_backend_refuses_non_default_transport(transport):
+    """Flow-backend honesty: the analytic model has no notion of ECN, PFC or
+    per-flow retransmission, so lowering a cell whose config asks for a real
+    transport policy must fail loudly instead of silently ignoring it."""
+    from repro.core.flow.model import lower_item
+    item = _item()
+    item["cfg"]["transport"] = transport
+    with pytest.raises(ValueError, match="transport"):
+        lower_item(item)
+
+
 # --------------------------------------------------------------------------
 # Batching contract (jax)
 # --------------------------------------------------------------------------
@@ -173,9 +185,12 @@ def test_canary_and_flow_import_jax_free():
         "import sys\n"
         "import repro.core.canary as c\n"
         "import repro.core.flow as f\n"
+        "import repro.core.transport as t\n"
         "from repro.core.flow.model import lower_item, solve_cell\n"
         "from repro.core.canary import BACKENDS, get_backend\n"
+        "from repro.core.transport import TRANSPORTS, make_transport\n"
         "assert 'flow' in BACKENDS and 'packet' in BACKENDS\n"
+        "assert 'gbn' in TRANSPORTS and 'dcqcn' in TRANSPORTS\n"
         "get_backend('packet')\n"
         "assert 'jax' not in sys.modules, 'core import pulled jax'\n"
         "print('JAXFREE_OK')\n")
