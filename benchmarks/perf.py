@@ -49,7 +49,7 @@ import os
 import platform
 import sys
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
                                scaled_config, three_tier_config)
@@ -118,6 +118,10 @@ def _micro_sim(name: str, mod=None):
 MICRO_CELLS = ("canary_noise", "canary_timers", "static_tree_noise",
                "ring_noise", "three_tier_canary")
 HEADLINE = "micro/canary_noise"
+# Documented ceiling for telemetry-on overhead at the default probe cadence
+# (ARCHITECTURE.md §Telemetry). Off costs one pointer compare per hook site,
+# which the interleaved A/B below cannot even resolve.
+TELEMETRY_BUDGET = 0.05
 
 
 def _time_once(name: str, mod=None) -> Dict[str, float]:
@@ -159,6 +163,72 @@ def _run_micro(name: str) -> Dict[str, Dict[str, float]]:
             f"{base['events']:.0f} — behavioural divergence")
     return {"live": live, "baseline": base,
             "speedup": live["events_per_sec"] / base["events_per_sec"]}
+
+
+def _headline_sim(telemetry: bool) -> Simulator:
+    """The headline micro cell's exact geometry, telemetry switchable —
+    must stay in lockstep with ``_micro_sim("canary_noise")``."""
+    scale = 4 if FAST else 8
+    data = (128 << 10) if FAST else (1 << 20)
+    cfg = scaled_config(scale, seed=3, telemetry=telemetry)
+    n = cfg.num_hosts
+    return Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), data)],
+                     algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+
+
+TELEMETRY_AB_REPS = 15  # pairs; resolving a 5% budget needs many more
+#                         samples than the throughput cells (MICRO_REPS)
+
+
+def _run_telemetry_ab() -> Dict[str, object]:
+    """Interleaved A/B of the headline cell with the telemetry hub off vs on
+    (default probe cadence), both on the live engine. Pins the observability
+    cost: the golden ``events`` counts must agree (probe ticks dispatch
+    outside it) and the on-side overhead must stay within
+    ``TELEMETRY_BUDGET``.
+
+    The overhead estimator is the **median of per-pair CPU-time ratios**
+    (``time.process_time``): each off/on pair runs back-to-back so both
+    arms see the same machine regime, per-pair ratios cancel the slow
+    frequency/contention drift that makes wall clock (and even
+    cross-minute CPU-time minima) swing by more than the budget being
+    resolved on a shared box, the median rejects the occasional pair
+    where a noise burst lands inside exactly one arm, and the arm order
+    alternates pair-to-pair so any systematic first-run advantage (turbo
+    decay, cache warm-up) cancels instead of biasing one arm. The
+    min-of-N rows are kept for the absolute throughput numbers."""
+    import gc
+    import statistics
+    best: Dict[bool, Optional[Dict[str, float]]] = {False: None, True: None}
+    ratios: List[float] = []
+    for rep in range(TELEMETRY_AB_REPS):
+        pair: Dict[bool, float] = {}
+        for tel in ((False, True) if rep % 2 == 0 else (True, False)):
+            sim = _headline_sim(tel)
+            gc.collect()
+            c0 = time.process_time()
+            t0 = time.perf_counter()
+            res = sim.run()
+            wall = time.perf_counter() - t0
+            cpu = time.process_time() - c0
+            assert res.correct, "telemetry A/B cell: reduction not exact"
+            pair[tel] = cpu
+            row = {"wall_s": wall, "cpu_s": cpu, "events": float(res.events),
+                   "probes": res.telemetry_summary.get("probes", 0.0)}
+            if best[tel] is None or cpu < best[tel]["cpu_s"]:
+                best[tel] = row
+        ratios.append(pair[True] / pair[False] - 1.0)
+    off, on = best[False], best[True]
+    assert off is not None and on is not None
+    if off["events"] != on["events"]:
+        raise AssertionError(
+            f"telemetry changed the golden event count: off "
+            f"{off['events']:.0f}, on {on['events']:.0f}")
+    overhead = statistics.median(ratios)
+    return {"off": off, "on": on, "overhead": overhead,
+            "overhead_min_ratio": on["cpu_s"] / off["cpu_s"] - 1.0,
+            "pairs": len(ratios), "budget": TELEMETRY_BUDGET,
+            "within_budget": overhead <= TELEMETRY_BUDGET}
 
 
 # ---------------------------------------------------------------- macro cells
@@ -253,6 +323,13 @@ def run_cells() -> Dict[str, Dict]:
              f"events_per_sec={row['live']['events_per_sec']:,.0f};"
              f"pre_pr={row['baseline']['events_per_sec']:,.0f};"
              f"speedup={row['speedup']:.2f}x")
+    tel = _run_telemetry_ab()
+    cells["telemetry/headline_ab"] = tel
+    emit("perf/telemetry/headline_ab", tel["on"]["wall_s"] * 1e6,
+         f"overhead={tel['overhead'] * 100:.1f}%;"
+         f"budget={TELEMETRY_BUDGET * 100:.0f}%;"
+         f"within_budget={tel['within_budget']};"
+         f"probes={int(tel['on']['probes'])}")
     for name, fn in MACRO_CELLS.items():
         wall, derived = fn()
         cells[f"macro/{name}"] = {"wall_s": wall}
@@ -290,6 +367,7 @@ def main(argv=None) -> None:
         "headline": headline,
         "speedup_vs_pre_pr": {n: cells[n]["speedup"]
                               for n in cells if "speedup" in cells[n]},
+        "telemetry_overhead": cells["telemetry/headline_ab"],
         "pinned_reference_rates": pinned,
         "python": platform.python_version(),
         "machine": platform.machine(),

@@ -21,12 +21,42 @@ import time
 import traceback
 
 
+def _telemetry_cell(trace_out) -> None:
+    """--telemetry: the instrumented headline cell (see ISSUE/ARCHITECTURE:
+    congested fat-tree, CANARY, background noise) + optional Perfetto dump."""
+    from repro.core.telemetry import (run_headline_cell, validate_perfetto,
+                                      write_perfetto)
+    fast = os.environ.get("BENCH_FAST")
+    sim = run_headline_cell(scale=4 if fast else 8,
+                            data_bytes=(1 << 17) if fast else (1 << 20))
+    res = sim.telemetry_result
+    print(res.summary())
+    for k, v in sorted(res.telemetry_summary.items()):
+        print(f"telemetry,{k},{v}")
+    if trace_out:
+        doc = write_perfetto(sim.telemetry, trace_out)
+        errs = validate_perfetto(doc)
+        if errs:
+            raise SystemExit(f"invalid trace: {errs[:3]}")
+        print(f"# wrote {trace_out} ({len(doc['traceEvents'])} events)",
+              file=sys.stderr, flush=True)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--backend",
                     default=os.environ.get("SWEEP_BACKEND", "packet"),
                     help="sweep suite executor: packet (default) | flow")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the headline congested cell with the telemetry "
+                         "hub enabled and print its summary digest")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="with --telemetry: write the Perfetto trace-event "
+                         "JSON here (load in ui.perfetto.dev)")
     args = ap.parse_args(argv)
+    if args.telemetry or args.trace_out:
+        _telemetry_cell(args.trace_out)
+        return
     from . import (collective_bench, common, fig2_overview, fig6_single_switch,
                    fig7_static_vs_canary, fig8_congestion_intensity,
                    fig9_message_sizes, fig10_concurrent, fig11_timeout_noise,

@@ -193,13 +193,42 @@ def provenance() -> dict:
     return _prov()
 
 
+def trace_first_cell(items: List[dict], path: str) -> dict:
+    """Re-run the sweep's first cell in-process with the telemetry hub live
+    and dump the Perfetto trace to ``path`` (the pool workers' results cross
+    a pickle boundary, so the hub object itself never leaves them)."""
+    from repro.core.canary import Algo
+    from repro.core.canary.algorithms import build_cell_simulator
+    from repro.core.canary.backends import item_config
+    from repro.core.telemetry import validate_perfetto, write_perfetto
+    it = items[0]
+    cfg = dataclasses.replace(item_config(it), telemetry=True)
+    sim = build_cell_simulator(cfg, Algo(it["algo"]), it["num_hosts"],
+                               it["data_bytes"], n_trees=it["n_trees"],
+                               congestion=it["congestion"], rep=it["rep"])
+    sim.run()
+    doc = write_perfetto(sim.telemetry, path)
+    errs = validate_perfetto(doc)
+    if errs:
+        raise SystemExit(f"invalid trace for cell {it['label']!r}: {errs[:3]}")
+    print(f"# traced cell {it['label']!r} -> {path} "
+          f"({len(doc['traceEvents'])} events)", file=sys.stderr, flush=True)
+    return doc
+
+
 def run_sweep(suite: str, topology: str = "fat_tree", reps: int = 2,
               procs: int = 0, backend: str = "packet",
-              speedup_probe: int = 0) -> dict:
+              speedup_probe: int = 0, telemetry: bool = False) -> dict:
     """Run a sweep; ``procs=0`` means serial (in-process), ``procs>=1`` uses a
     worker pool (packet backend only — the flow backend batches in-process).
     Returns the JSON-ready result document."""
     items = expand_suite(suite, topology, reps)
+    if telemetry:
+        if backend != "packet":
+            raise SystemExit("--telemetry needs the packet backend "
+                             "(the flow model has nothing to observe)")
+        for it in items:
+            it["cfg"]["telemetry"] = True
     t0 = time.perf_counter()
     if backend == "packet":
         cells = _run_items_packet(items, procs)
@@ -256,12 +285,22 @@ def main(argv=None) -> None:
                     help="flow backend: run N cells through the packet "
                          "engine too and record the wall-clock comparison "
                          "(0 disables)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the telemetry hub in every cell (packet "
+                         "backend only); per-cell summaries land in the "
+                         "result JSON under 'telemetry'")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="re-run the first cell in-process with telemetry "
+                         "and write its Perfetto trace-event JSON here")
     ap.add_argument("--out", default=None, help="JSON output path")
     args = ap.parse_args(argv)
     doc = run_sweep(args.suite, args.topology, args.reps, args.procs,
                     backend=args.backend,
                     speedup_probe=args.speedup_probe
-                    if args.backend != "packet" else 0)
+                    if args.backend != "packet" else 0,
+                    telemetry=args.telemetry)
+    if args.trace_out:
+        trace_first_cell(doc["items"], args.trace_out)
     suffix = "" if args.backend == "packet" else f"_{args.backend}"
     out = args.out or f"sweep_{args.suite}_{args.topology}{suffix}.json"
     with open(out, "w") as fh:

@@ -1,0 +1,78 @@
+"""Run an instrumented cell and export its telemetry (Perfetto + series).
+
+Usage::
+
+    PYTHONPATH=src python scripts/export_telemetry.py \
+        --out trace.json --csv series.csv
+
+Runs the headline congested fat-tree cell (half the hosts allreduce under
+CANARY, the other half generate background congestion, sender-side noise so
+descriptor timeout flushes actually occur) with the telemetry hub enabled,
+then writes:
+
+* ``--out``  — Perfetto / Chrome trace-event JSON. Open it in
+  https://ui.perfetto.dev: block-lifecycle spans under the *apps* process,
+  descriptor aggregation windows under *switches*, transport instants under
+  *hosts*, and every probe series as a counter track.
+* ``--csv``  — flat ``series,t_ns,value`` rows for pandas/gnuplot.
+* ``--series-json`` — the same series as one JSON object (with hi/lo).
+
+The emitted trace is schema-checked (``validate_perfetto``) before the
+script exits 0 — CI runs this as the telemetry smoke step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.telemetry import (run_headline_cell, validate_perfetto,
+                                  write_perfetto, write_series_csv,
+                                  write_series_json)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", type=int, default=8,
+                    help="fabric scale (scaled_config leaves/spines; "
+                         "default 8 = 64 hosts)")
+    ap.add_argument("--data-bytes", type=int, default=1 << 20,
+                    help="allreduce payload per host (default 1 MiB)")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--probe-ns", type=float, default=None,
+                    help="override the probe cadence (sim ns)")
+    ap.add_argument("--out", default="telemetry_trace.json",
+                    help="Perfetto trace-event JSON path")
+    ap.add_argument("--csv", default=None, help="flat series CSV path")
+    ap.add_argument("--series-json", default=None,
+                    help="series-as-JSON path (includes per-series hi/lo)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.probe_ns is not None:
+        overrides["telemetry_probe_ns"] = args.probe_ns
+    sim = run_headline_cell(scale=args.scale, data_bytes=args.data_bytes,
+                            seed=args.seed, **overrides)
+    res = sim.telemetry_result
+    print(res.summary())
+    for k, v in sorted(res.telemetry_summary.items()):
+        print(f"  {k} = {v}")
+
+    doc = write_perfetto(sim.telemetry, args.out)
+    errs = validate_perfetto(doc)
+    if errs:
+        print(f"INVALID trace ({len(errs)} violations):", file=sys.stderr)
+        for e in errs[:10]:
+            print(f"  {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"wrote {args.out} ({len(doc['traceEvents'])} trace events) "
+          f"-> load in https://ui.perfetto.dev")
+    if args.csv:
+        n = write_series_csv(sim.telemetry, args.csv)
+        print(f"wrote {args.csv} ({n} samples)")
+    if args.series_json:
+        n = write_series_json(sim.telemetry, args.series_json)
+        print(f"wrote {args.series_json} ({n} samples)")
+
+
+if __name__ == "__main__":
+    main()

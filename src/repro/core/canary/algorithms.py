@@ -41,6 +41,31 @@ def pick_hosts(cfg: SimConfig, n: int, rng: random.Random) -> List[int]:
     return rng.sample(range(cfg.num_hosts), n)
 
 
+def build_cell_simulator(cfg: SimConfig, algo: Algo,
+                         num_allreduce_hosts: int, data_bytes: int, *,
+                         n_trees: int = 1, congestion: bool = False,
+                         num_apps: int = 1, rep: int = 0) -> Simulator:
+    """Construct rep ``rep`` of one experiment cell — the exact Simulator
+    :func:`run_allreduce` would run, handed back unstarted so callers can
+    keep the live object (the telemetry exporters need the hub after
+    ``run()``, which ``ExperimentResult`` does not carry)."""
+    rng = random.Random(cfg.seed * 1000003 + rep)
+    chosen = pick_hosts(cfg, num_allreduce_hosts, rng)
+    per_app = max(2, num_allreduce_hosts // num_apps)
+    jobs = []
+    for a in range(num_apps):
+        parts = chosen[a * per_app:(a + 1) * per_app]
+        if len(parts) < 2:
+            break
+        jobs.append(AllreduceJob(app=a, participants=parts,
+                                 data_bytes=data_bytes))
+    noise = [h for h in range(cfg.num_hosts) if h not in set(chosen)] \
+        if congestion else []
+    rcfg = dataclasses.replace(cfg, seed=cfg.seed + rep)
+    return Simulator(rcfg, jobs, algo=algo, n_trees=n_trees,
+                     noise_hosts=noise)
+
+
 def run_allreduce(cfg: SimConfig,
                   algo: Algo,
                   num_allreduce_hosts: int,
@@ -62,21 +87,9 @@ def run_allreduce(cfg: SimConfig,
     per-rep work items without changing its results."""
     results: List[SimResult] = []
     for rep in range(rep0, rep0 + reps):
-        rng = random.Random(cfg.seed * 1000003 + rep)
-        chosen = pick_hosts(cfg, num_allreduce_hosts, rng)
-        per_app = max(2, num_allreduce_hosts // num_apps)
-        jobs = []
-        for a in range(num_apps):
-            parts = chosen[a * per_app:(a + 1) * per_app]
-            if len(parts) < 2:
-                break
-            jobs.append(AllreduceJob(app=a, participants=parts,
-                                     data_bytes=data_bytes))
-        noise = [h for h in range(cfg.num_hosts) if h not in set(chosen)] \
-            if congestion else []
-        rcfg = dataclasses.replace(cfg, seed=cfg.seed + rep)
-        sim = Simulator(rcfg, jobs, algo=algo, n_trees=n_trees,
-                        noise_hosts=noise)
+        sim = build_cell_simulator(cfg, algo, num_allreduce_hosts, data_bytes,
+                                   n_trees=n_trees, congestion=congestion,
+                                   num_apps=num_apps, rep=rep)
         results.append(sim.run())
     gp = [statistics.mean(r.goodput_gbps.values()) for r in results]
     rt = [r.duration_ns / 1e3 for r in results]

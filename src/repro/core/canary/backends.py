@@ -91,13 +91,16 @@ class PacketBackend:
                             congestion=item["congestion"], reps=1,
                             rep0=item["rep"])
         wall = time.perf_counter() - t0
-        return dict(label=item["label"], rep=item["rep"],
+        cell = dict(label=item["label"], rep=item["rep"],
                     goodput_gbps=res.goodput_gbps_mean,
                     runtime_us=res.runtime_us_mean,
                     avg_utilization=res.avg_utilization,
                     correct=res.correct,
                     events=res.reps[0].events,
                     wall_s=wall)
+        if cfg.telemetry:
+            cell["telemetry"] = res.reps[0].telemetry_summary
+        return cell
 
     def run_cells(self, items: List[dict]) -> List[dict]:
         return [self.run_cell(it) for it in items]

@@ -51,12 +51,19 @@ EV_GBN_TIMER = 11     # a=host, c=("p"|"b", flow key, epoch)
 # entries in FIFO order — one heap entry per busy link instead of one per
 # in-flight packet. The loop pops the head packet, re-arms the link's next
 # head, and dispatches the same handlers as kinds 0/1 with ``c = packet``.
-# These must stay the HIGHEST kind ids: the run loop detects them with a
-# single ``kind >= EV_LINK_ARRIVE_SWITCH`` compare. Renumbering kinds is
+# These must stay a CONTIGUOUS band above the protocol kinds: the run loop
+# detects them with a ``kind >= EV_LINK_ARRIVE_SWITCH`` /
+# ``kind <= EV_LINK_ARRIVE_HOST`` compare pair. Renumbering kinds is
 # golden-safe — heap order is (t, seq) only; kind never orders events.
 EV_LINK_ARRIVE_SWITCH = 12  # a=global switch idx, b=in port, c=Link
 EV_LINK_ARRIVE_HOST = 13    # a=host, c=Link
-N_EVENT_KINDS = 14
+# Telemetry probe (repro.core.telemetry): a periodic observation-only sample
+# tick. Dispatched by the loop's third branch WITHOUT incrementing the
+# ``events`` counter — the counter is a golden-pinned field, and probes are
+# pure observation, so telemetry-on runs report the identical dispatch count
+# as telemetry-off runs. Never pushed unless telemetry is enabled.
+EV_TELEMETRY_PROBE = 14     # c=Telemetry hub (re-arms itself)
+N_EVENT_KINDS = 15
 
 Handler = Callable[[int, int, object], None]
 
@@ -113,6 +120,7 @@ class EventLoop:
         events = self.events
         _heappush = heapq.heappush
         _LINK = EV_LINK_ARRIVE_SWITCH  # loop-local: no global load per event
+        _LINK_HOST = EV_LINK_ARRIVE_HOST
         try:
             while True:
                 if heap:
@@ -127,8 +135,11 @@ class EventLoop:
                     raise RuntimeError("event budget exceeded — livelock?")
                 t, _, kind, a, b, c = _heappop(src)
                 self.now = t
-                events += 1
-                if kind >= _LINK:
+                if kind < _LINK:
+                    events += 1
+                    handlers[kind](a, b, c)
+                elif kind <= _LINK_HOST:
+                    events += 1
                     # staged link arrival: deliver the FIFO head, re-arm the
                     # link's next head (its (t, seq) were assigned at
                     # transmit time, so global ordering is preserved)
@@ -139,6 +150,8 @@ class EventLoop:
                         _heappush(heap, (head[0], head[1], kind, a, b, c))
                     handlers[kind](a, b, entry[2])
                 else:
+                    # EV_TELEMETRY_PROBE: observation-only sample, excluded
+                    # from the golden ``events`` count and the livelock budget
                     handlers[kind](a, b, c)
         finally:
             self.events = events

@@ -110,6 +110,11 @@ class HostProtocol:
         # transport policy (None under the default "none" — every hook below
         # is guarded by one identity check, the trace-recorder pattern)
         self._transport = None
+        self._telemetry = None
+        # telemetry site state, installed by Telemetry.start(): the hub's
+        # block_left countdown dict while spans are on, else None — one load
+        # + identity check gates the whole completion hook
+        self._tel_left = None
         self._fail_resend_bypass = False
         self._gbn = False  # transport owns block retx (go-back-N recovery)
 
@@ -122,6 +127,7 @@ class HostProtocol:
         self._next_noise_pkt = sim.workload.next_noise_packet
         self._sender_delay = sim.workload.sender_delay_ns
         self._transport = sim.transport
+        self._telemetry = sim.telemetry
         self._fail_resend_bypass = sim.strategy.fail_resend_bypass
         self._gbn = self._transport is not None \
             and self._transport.owns_block_retx
@@ -204,6 +210,16 @@ class HostProtocol:
         flags[block] = 1
         if sim.trace is not None:
             sim.trace.on_host_complete(host, app, block)
+        # telemetry hot-site inlining: _tel_left IS the hub's per-block
+        # countdown dict (spans on) — decrement in place and only pay a call
+        # for the LAST completion of a block, which closes its lifecycle span
+        tl = self._tel_left
+        if tl is not None:
+            arr = tl[app]
+            n = arr[block] - 1
+            arr[block] = n
+            if n <= 0:
+                self._telemetry.on_block_complete(host, app, block)
         tp = self._transport
         if tp is not None and tp.owns_block_retx:
             tp.on_block_complete(host, app, block)
@@ -231,6 +247,10 @@ class HostProtocol:
             return
         st.done = True
         self.completed_total[key] = total
+        if self._telemetry is not None:
+            # before complete_at_host: the broadcast sub-span opens at the
+            # leader-done instant, ahead of any participant completion
+            self._telemetry.on_leader_done(host, app, block)
         self.complete_at_host(host, app, block, total)
         if sim.jobs[app].collective == "reduce":
             return  # §6: a reduce skips the broadcast phase entirely
@@ -413,6 +433,8 @@ class HostProtocol:
             return
         self.host_gen[hkey] = gen
         sim.retransmissions += 1
+        if self._telemetry is not None:
+            self._telemetry.on_retx("fail", host, app, block)
         fallback = pkt.counter == 1 or app in sim.bypass_apps
         # Plan-driven strategies (static tree) have no per-generation switch
         # state: a resent cohort routed through the plan waits forever for
@@ -458,6 +480,8 @@ class HostProtocol:
         if self.host_gen.get((host, app, block), 0) > gen:
             return  # a newer generation is already in flight
         sim.retransmissions += 1
+        if self._telemetry is not None:
+            self._telemetry.on_retx("request", host, app, block)
         req = Packet(kind=PacketKind.RETX_REQ, dest=sim.leader_of(app, block),
                      id=make_id(app, block, gen),
                      size_bytes=cfg.header_bytes + 16, src=host)
@@ -479,6 +503,8 @@ class HostProtocol:
             return
         gen = self.host_gen.get((host, app, block), 0)
         sim.retransmissions += 1
+        if self._telemetry is not None:
+            self._telemetry.on_retx("request", host, app, block)
         req = Packet(kind=PacketKind.RETX_REQ, dest=sim.leader_of(app, block),
                      id=make_id(app, block, gen),
                      size_bytes=sim.cfg.header_bytes + 16, src=host)

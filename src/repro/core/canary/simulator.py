@@ -35,8 +35,8 @@ from . import network as _network  # noqa: F401  (registers "fat_tree")
 from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
                      EV_GBN_TIMER, EV_JOB_ARRIVE, EV_LEADER_DONE,
                      EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH, EV_PFC_PAUSE,
-                     EV_PFC_RESUME, EV_PUMP, EV_RATE_TIMER, EV_RETX, EV_TIMER,
-                     EventLoop, N_EVENT_KINDS)
+                     EV_PFC_RESUME, EV_PUMP, EV_RATE_TIMER, EV_RETX,
+                     EV_TELEMETRY_PROBE, EV_TIMER, EventLoop, N_EVENT_KINDS)
 from .hostproto import HostProtocol
 from .switch import SwitchLayer, make_strategy
 from .topology import make_topology
@@ -85,6 +85,15 @@ class Simulator:
             from ..trace.recorder import TraceRecorder  # deferred: optional
             self.trace = TraceRecorder(self)
 
+        # opt-in telemetry (repro.core.telemetry): the same observation-only
+        # deal as the trace recorder — ``None`` when off, so every layer
+        # hook site is one guarded identity check, and on-runs replay the
+        # goldens bit-for-bit (probe ticks are outside the events count).
+        self.telemetry = None
+        if cfg.telemetry:
+            from ..telemetry.hub import Telemetry  # deferred: optional
+            self.telemetry = Telemetry(self)
+
         # layers (construction order matters: strategies touch hostproto)
         self.switch = SwitchLayer(self, self.net.num_switches)
         self.hostproto = HostProtocol(self, cfg.num_hosts)
@@ -105,6 +114,8 @@ class Simulator:
         self.net.bind(self)
         if self.transport is not None:
             self.transport.finalize()
+        if self.telemetry is not None:
+            self.telemetry.finalize()
 
         # multi-tenant fleet state (repro.core.fleet). With no admission
         # controller everything below stays empty and the dataplane behaves
@@ -332,6 +343,10 @@ class Simulator:
             handlers[EV_PFC_RESUME] = tp.handle_pfc_resume
             handlers[EV_RATE_TIMER] = tp.handle_rate_timer
             handlers[EV_GBN_TIMER] = tp.handle_gbn_timer
+        tel = self.telemetry
+        if tel is not None:
+            handlers[EV_TELEMETRY_PROBE] = tel.handle_probe
+            tel.start()  # arm the self-re-arming probe chain
         # the event loop allocates millions of short-lived tuples/packets and
         # creates no reference cycles; pausing the cyclic GC for the drain is
         # worth ~10-15% wall time (state restored on every exit path)
@@ -344,6 +359,8 @@ class Simulator:
         finally:
             if gc_was_enabled:
                 gc.enable()
+        if tel is not None:
+            tel.finish()  # closing probe sample: series end at final state
         end = max(self.app_done_ns.values()) if self.app_done_ns else self.now
         utils = self.net.utilizations(end if end > 0 else 1.0)
         goodput = {}
@@ -388,4 +405,5 @@ class Simulator:
             drop_causes=drop_causes,
             transport_stats=tele,
             host_rate_gbps=host_rates,
+            telemetry_summary=(tel.summary_dict() if tel is not None else {}),
         )

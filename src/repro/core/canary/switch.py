@@ -70,6 +70,7 @@ class SwitchLayer:
         self._fwd_host = None
         self._fwd_switch = None
         self._pool_free = None
+        self._telemetry = None
 
     def finalize(self) -> None:
         """Pre-resolve per-run hot-path callables (strategy hooks + topology
@@ -80,6 +81,7 @@ class SwitchLayer:
         self._fwd_host = sim.net.forward_toward_host
         self._fwd_switch = sim.net.forward_toward_switch
         self._pool_free = sim.pool.free
+        self._telemetry = sim.telemetry
 
     # ------------------------------------------------------------- dispatch
     def arrive(self, sw: int, in_port: int, pkt: Packet) -> None:
@@ -87,6 +89,9 @@ class SwitchLayer:
         if self.failed[sw]:
             sim.dropped += 1
             sim.dropped_failed += 1
+            tel = self._telemetry
+            if tel is not None:
+                tel.on_drop("switch_fail", sw)
             if not pkt.multicast:
                 self._pool_free(pkt)
             return
@@ -190,6 +195,14 @@ class AggregationStrategy:
     # the leader's never-resent leaf contribution). Read by
     # HostProtocol.host_handle_fail when a transport policy owns block retx.
     fail_resend_bypass = False
+    # telemetry site state, installed by Telemetry.start() and retracted by
+    # the hub when a site goes cold (all blocks opened / instant log full):
+    # _tel_open is the hub's block_open dict (first-send detection),
+    # _tel_pkt is the hub itself while per-packet instants are wanted.
+    # Pre-binding the state into ONE attribute keeps the hot sites at a
+    # single load + identity check (see ARCHITECTURE.md §Telemetry).
+    _tel_open = None
+    _tel_pkt = None
 
     def __init__(self, sim):
         self.sim = sim
@@ -203,6 +216,12 @@ class AggregationStrategy:
         self._pool = sim.pool
         self._trace = sim.trace
         self._transport = sim.transport
+        tel = sim.telemetry
+        self._telemetry = tel
+        # pre-bound descriptor hooks (None when telemetry is off): saves the
+        # second attribute hop at the per-descriptor call sites
+        self._tel_desc_alloc = None if tel is None else tel.on_desc_alloc
+        self._tel_desc_flush = None if tel is None else tel.on_desc_flush
         self._mtu = cfg.mtu_bytes
         self._retx_timeout = cfg.retx_timeout_ns
         # per-app send constants, built lazily on first pump (after
@@ -276,6 +295,13 @@ class AggregationStrategy:
                 pkt.src = host
                 if self._trace is not None:
                     self._trace.on_host_send(host, pkt)
+                # telemetry hot-site inlining: only a block's FIRST send is
+                # interesting — _tel_open IS the hub's block_open dict while
+                # unopened blocks remain (the hub retracts it after the last
+                # one), so repeats are rejected without paying a call
+                bo = self._tel_open
+                if bo is not None and (pkt.id >> GEN_BITS) not in bo:
+                    self._telemetry.on_host_send(host, pkt)
                 tp = self._transport
                 if tp is not None and tp.owns_block_retx:
                     # go-back-N block flows supersede the whole-block timer
@@ -374,6 +400,9 @@ class CanaryStrategy(AggregationStrategy):
                 sim.stragglers += 1
                 if trace is not None:
                     trace.on_straggler(sw, in_port, pkt)
+                tel = self._tel_pkt  # hub while the instant log has room
+                if tel is not None:
+                    tel.on_straggler(sw, pkt)
                 self._fwd_host(sim, sw, pkt)
             else:
                 desc.value += pkt.value
@@ -405,6 +434,9 @@ class CanaryStrategy(AggregationStrategy):
             sim.collisions += 1
             if trace is not None:
                 trace.on_collision(sw, in_port, pkt)
+            tel = self._tel_pkt  # hub while the instant log has room
+            if tel is not None:
+                tel.on_collision(sw, pkt)
             pkt.switch_addr = sw
             pkt.port_stamp = in_port
             pkt.bypass = True
@@ -422,6 +454,9 @@ class CanaryStrategy(AggregationStrategy):
             dh[sw] = n
         if trace is not None:
             trace.on_desc_alloc(sw, desc, in_port, pkt)
+        tel_alloc = self._tel_desc_alloc
+        if tel_alloc is not None:
+            tel_alloc(sw, desc, n)
         if desc.counter >= desc.hosts - 1:
             self._fire_descriptor(sw, desc)
             self._pool.free(pkt)
@@ -457,6 +492,9 @@ class CanaryStrategy(AggregationStrategy):
         out.src = -1
         if self._trace is not None:
             self._trace.on_desc_flush(sw, desc, out, reason)
+        tel_flush = self._tel_desc_flush
+        if tel_flush is not None:
+            tel_flush(sw, desc, reason)
         self._fwd_host(sim, sw, out)
 
     def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
@@ -534,6 +572,9 @@ class StaticTreeStrategy(AggregationStrategy):
             n = len(table)
             if n > dh[sw]:
                 dh[sw] = n
+            tel_alloc = self._tel_desc_alloc
+            if tel_alloc is not None:
+                tel_alloc(sw, desc, n)
         desc.children.add(in_port)
         desc.value += pkt.value
         desc.counter += pkt.counter
@@ -556,6 +597,9 @@ class StaticTreeStrategy(AggregationStrategy):
             out.src = -1  # switch-originated aggregate (see CanaryStrategy)
             if trace is not None:
                 trace.on_desc_flush(sw, desc, out, "complete")
+            tel_flush = self._tel_desc_flush
+            if tel_flush is not None:
+                tel_flush(sw, desc, "complete")
             sim.net.static_send_up(sim, sw, root, out)
             desc.sent = True
         else:
@@ -569,6 +613,9 @@ class StaticTreeStrategy(AggregationStrategy):
             for port in desc.children:
                 out_port_send(sim, sw, port, bc)
             table.pop(pid, None)
+            tel_flush = self._tel_desc_flush
+            if tel_flush is not None:
+                tel_flush(sw, desc, "complete")
         self._pool.free(pkt)
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:

@@ -104,6 +104,9 @@ class Topology:
     # ``transport="none"`` policy, and stub sims without the attribute)
     # costs one identity check per send and nothing else.
     _transport = None
+    # Telemetry hub (repro.core.telemetry): only consulted inside the rare
+    # wire-drop branch, so the common send path pays nothing even when on.
+    _telemetry = None
 
     def bind(self, sim) -> None:
         """Pre-resolve per-run callables (ARCHITECTURE.md §Performance).
@@ -112,6 +115,7 @@ class Topology:
         state (the engine for inline pushes, the RNG draw)."""
         self._pool_free = sim.pool.free
         self._transport = getattr(sim, "transport", None)
+        self._telemetry = getattr(sim, "telemetry", None)
 
     @classmethod
     def config_num_switches(cls, cfg: SimConfig) -> int:
@@ -168,6 +172,9 @@ class Topology:
             tp.on_egress(link, pkt, busy - now)
         if sim._drop_prob and sim._rng_random() < sim._drop_prob:
             sim.dropped += 1
+            tel = self._telemetry
+            if tel is not None:
+                tel.on_drop("wire", sw)
             if not pkt.multicast:
                 sim.pool.free(pkt)
         else:
@@ -191,6 +198,9 @@ class Topology:
             tp.on_egress(link, pkt, busy - now)
         if sim._drop_prob and sim._rng_random() < sim._drop_prob:
             sim.dropped += 1
+            tel = self._telemetry
+            if tel is not None:
+                tel.on_drop("wire", host)
             if not pkt.multicast:
                 sim.pool.free(pkt)
         else:

@@ -331,6 +331,25 @@ class SimConfig:
     # touches no RNG draw, schedules no event and mutates no protocol state,
     # so traced runs reproduce untraced ``SimResult``s bit-for-bit.
     trace: bool = False
+    # Opt-in telemetry (repro.core.telemetry): a metrics registry, periodic
+    # time-series probes sampled on a sim-time cadence, block/descriptor
+    # lifecycle spans, and Perfetto / CSV exporters. Observation-only like
+    # ``trace``: off means ``Simulator.telemetry is None`` and every hook
+    # site reduces to one identity check; on leaves the golden event stream
+    # bit-identical (probe ticks dispatch outside the ``events`` count, and
+    # no hook touches ``sim.rng`` or protocol state). Knobs are FLAT fields
+    # so sweep work items survive the asdict -> SimConfig(**cfg) round trip.
+    telemetry: bool = False
+    telemetry_probe_ns: float = 10_000.0  # probe cadence in sim time
+    telemetry_probes: bool = True         # periodic time-series sampling
+    telemetry_spans: bool = True          # lifecycle spans + instant events
+    telemetry_max_spans: int = 200_000    # span cap (overflow is counted,
+    telemetry_max_samples: int = 200_000  # per-series sample cap  never silent)
+    # Per-*packet* instants (stragglers, collisions) get their own, much
+    # smaller cap: a congested cell emits tens of thousands, which are
+    # worthless individually in a trace view (the exact totals live in
+    # ``SimResult``) but dominate the telemetry-on overhead if all retained.
+    telemetry_max_pkt_instants: int = 2_000
 
     # Derived ------------------------------------------------------------------
     @property
@@ -537,6 +556,14 @@ class SimResult:
     drop_causes: Dict[str, int] = field(default_factory=dict)
     transport_stats: Dict[str, float] = field(default_factory=dict)
     host_rate_gbps: Dict[int, float] = field(default_factory=dict)
+    # -- telemetry (repro.core.telemetry) -------------------------------------
+    # Flat numeric digest of the run's Telemetry hub (probe/span/sample
+    # counts, backlog and occupancy high-waters, flush split). Deliberately a
+    # plain dict of floats — the live hub (with full series and spans) stays
+    # on ``Simulator.telemetry``; embedding it here would break the
+    # ``dataclasses.asdict`` round trip sweep work items rely on. Empty when
+    # telemetry is off.
+    telemetry_summary: Dict[str, float] = field(default_factory=dict)
 
     def jct_ns(self, app: int) -> float:
         """Job completion time: finish minus submit (includes deferral wait)."""
@@ -544,13 +571,18 @@ class SimResult:
 
     def summary(self) -> str:
         gp = ", ".join(f"app{a}={g:.1f}Gbps" for a, g in sorted(self.goodput_gbps.items()))
+        # an app with no finish time (deferred, still running, or a budget
+        # abort) renders as "done=-", never "done=nan us"
+        done = {a: (f"{t/1e3:.1f}us" if t is not None else "-")
+                for a in sorted(self.goodput_gbps)
+                for t in (self.job_finish_ns.get(a),)}
         apps = " ".join(
-            f"app{a}[done={self.job_finish_ns.get(a, float('nan'))/1e3:.1f}us "
-            f"fb={self.app_fallback_blocks.get(a, 0)}]"
+            f"app{a}[done={done[a]} fb={self.app_fallback_blocks.get(a, 0)}]"
             for a in sorted(self.goodput_gbps))
-        dc = self.drop_causes
-        drops = (f"drops[wire={dc.get('wire', 0)}"
-                 f",switch={dc.get('switch_fail', 0)}]")
+        # render EVERY cause present (insertion order), so policy-specific
+        # causes like gbn_ooo_discard — and any future ones — never vanish
+        dc = self.drop_causes or {"wire": 0, "switch_fail": 0}
+        drops = "drops[" + ",".join(f"{k}={v}" for k, v in dc.items()) + "]"
         tseg = ""
         if self.transport != "none":
             ts = self.transport_stats
@@ -560,6 +592,10 @@ class SimResult:
                     f" pfc={int(ts.get('pfc_pauses', 0))}"
                     f" gbn_retx={int(ts.get('gbn_retx', 0))}"
                     f" ooo={int(ts.get('gbn_ooo', 0))}]")
+            if self.host_rate_gbps:
+                # senders DCQCN still held below line rate at end of run
+                tseg += (f" throttled[{len(self.host_rate_gbps)}hosts"
+                         f" min={min(self.host_rate_gbps.values()):.1f}Gbps]")
         return (f"t={self.duration_ns/1e3:.1f}us {gp} correct={self.correct} "
                 f"stragglers={self.stragglers} collisions={self.collisions} "
                 f"retx={self.retransmissions} maxdesc={self.max_descriptors_per_switch} "

@@ -61,6 +61,10 @@ class FleetResult:
     degraded_jobs: int
     deferred_jobs: int
     per_tenant: Dict[int, dict] = field(default_factory=dict)
+    # tenant -> [(t_ns, blocks_in_flight)], present only when the scenario's
+    # cfg enabled telemetry (merged from the hub's per-app probe series)
+    tenant_series: Dict[int, List[Tuple[float, float]]] = \
+        field(default_factory=dict)
 
     @property
     def correct(self) -> bool:
@@ -146,7 +150,47 @@ class FleetDriver:
             degraded_jobs=sum(1 for r in records if not r.admitted),
             deferred_jobs=len(admission.deferrals) if admission else 0,
             per_tenant=per_tenant,
+            tenant_series=(tenant_remaining_series(sim, s.jobs)
+                           if sim.telemetry is not None else {}),
         )
+
+
+def tenant_remaining_series(sim, jobs) -> Dict[int, List[Tuple[float, float]]]:
+    """Merge the telemetry hub's per-app ``app/{app}/remaining`` probe series
+    into one step-summed blocks-in-flight series per tenant.
+
+    Each app series is a step function (delta-encoded); the merge walks the
+    union of their timestamps carrying each app's last value, so the sum is
+    exact at every recorded point. The merged series are also written back
+    into the hub registry as ``tenant/{t}/remaining`` so the exporters emit
+    them alongside the raw per-app tracks."""
+    reg = sim.telemetry.registry
+    by_tenant: Dict[int, list] = {}
+    for j in jobs:
+        ts = reg.series.get(f"app/{j.app}/remaining")
+        if ts is None:
+            continue
+        t = j.tenant if j.tenant >= 0 else j.app
+        by_tenant.setdefault(t, []).append(ts)
+    out: Dict[int, List[Tuple[float, float]]] = {}
+    for t, series in sorted(by_tenant.items()):
+        stamps = sorted({tt for ts in series for tt in ts.t})
+        idx = [0] * len(series)
+        last = [0.0] * len(series)
+        merged: List[Tuple[float, float]] = []
+        for tt in stamps:
+            for k, ts in enumerate(series):
+                while idx[k] < len(ts.t) and ts.t[idx[k]] <= tt:
+                    last[k] = ts.v[idx[k]]
+                    idx[k] += 1
+            total = sum(last)
+            if not merged or merged[-1][1] != total:
+                merged.append((tt, total))
+        out[t] = merged
+        hub_ts = reg.ts(f"tenant/{t}/remaining")
+        for tt, v in merged:
+            hub_ts.record(tt, v)
+    return out
 
 
 def run_fleet(scenario: FleetScenario) -> FleetResult:

@@ -112,6 +112,12 @@ def lower_item(item: dict) -> FlowCell:
         raise ValueError(
             f"the flow backend cannot model transport={cfg.transport!r}; "
             "use backend='packet' for transport-policy experiments")
+    if cfg.telemetry:
+        # no packets, descriptors or probe events exist here — there is
+        # nothing for the telemetry hub to observe
+        raise ValueError(
+            "the flow backend cannot record telemetry; "
+            "use backend='packet' for telemetry runs")
     if "lb" in item:
         cfg = dataclasses.replace(cfg, lb=item["lb"])
     algo = item["algo"]

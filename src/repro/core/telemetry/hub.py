@@ -1,0 +1,488 @@
+"""The Telemetry hub: probes, spans and instants for one simulation run.
+
+Contract (mirrors the trace recorder, see ARCHITECTURE.md §Telemetry):
+
+* **Off = no object.** ``Simulator.telemetry`` is ``None`` unless
+  ``SimConfig.telemetry`` is set; every hook site in the layers is one
+  guarded ``if self._telemetry is not None`` identity check, so the off
+  path costs nothing measurable.
+* **Observation-only.** No hook draws from ``sim.rng``, schedules a
+  protocol event, or mutates layer state. The periodic probe rides its own
+  engine event kind (``EV_TELEMETRY_PROBE``) which the run loop dispatches
+  *outside* the golden ``events`` count — telemetry-on runs replay every
+  golden bit-for-bit, including the event counter.
+* **No packet retention.** Hooks read packet/descriptor fields during the
+  call and keep only plain numbers — the packet pool recycles objects, so
+  holding a reference would alias a future packet.
+* **Cheap when on.** Hooks run once per protocol event in the hottest
+  loops, so they do no string formatting: spans and instants are appended
+  as small raw tuples (first element = type tag) and only rendered into
+  names/args by the exporters; per-switch series and histograms are
+  pre-resolved at :meth:`finalize`. The perf suite pins the on-overhead
+  budget (``benchmarks.perf.TELEMETRY_BUDGET``).
+
+Two data planes:
+
+* **Probes** (``telemetry_probes``): every ``telemetry_probe_ns`` of sim
+  time, sample per-link queue backlog, per-switch descriptor-table
+  occupancy (the series are sampled; the per-switch *high-water* gauge is
+  event-driven at on_desc_alloc and therefore exact at any cadence — see
+  ``desc_high_water``), per-host DCQCN pacing rate, transport counter rates
+  (ECN marks, CNPs, PFC pauses, go-back-N retx) and per-app outstanding
+  block count. Series are delta-encoded (see ``metrics.TimeSeries``).
+* **Spans** (``telemetry_spans``): block lifecycle (first REDUCE send ->
+  last participant completion, with the leader-done -> completion broadcast
+  tail as a nested span), per-descriptor aggregation windows (alloc ->
+  timeout/complete flush), and instant events for drops, collisions,
+  stragglers, retransmissions, CNPs and PFC pause/resume.
+
+Span tuples (exporters render these — keep in sync with ``export.py``):
+
+* ``("block", app, block, t0, t1, last_host)``
+* ``("bcast", app, block, t0, t1)``
+* ``("desc", sw, app, block, reason, merges, children, t0, t1)``
+
+Instant tuples:
+
+* ``("leader_done", app, block, leader, t)``
+* ``("collision"|"straggler", sw, block, t)``
+* ``("drop", cause, where, t)``
+* ``("retx", what, app, host, block, t)``
+* ``("cnp", dst, src, t)``
+* ``("pfc", host, paused, t)``
+* ``("gbn", what, host, count, t)``
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from ..canary.engine import EV_TELEMETRY_PROBE
+from ..canary.types import APP_SHIFT, GEN_BITS
+from .metrics import MetricsRegistry
+
+__all__ = ["Telemetry"]
+
+# generation-free block key: (app << _APP_BITS_SHIFT) | block — the same
+# packing as Packet.id >> GEN_BITS, so on_host_send computes it with one shift
+_APP_BITS_SHIFT = APP_SHIFT - GEN_BITS
+_BLOCK_MASK = (1 << _APP_BITS_SHIFT) - 1
+
+
+class Telemetry:
+    """Per-run telemetry hub. Constructed by the facade when
+    ``cfg.telemetry`` is set; :meth:`finalize` runs after all layers bind."""
+
+    def __init__(self, sim) -> None:
+        self.sim = sim
+        cfg = sim.cfg
+        self.cfg = cfg
+        self.probe_ns = float(cfg.telemetry_probe_ns)
+        self.registry = MetricsRegistry(series_cap=cfg.telemetry_max_samples)
+        self.probes = 0
+        self.spans_dropped = 0
+        self._probes_on = bool(cfg.telemetry_probes)
+        self._spans_on = bool(cfg.telemetry_spans)
+        self._max_spans = int(cfg.telemetry_max_spans)
+        self._max_pkt = min(int(cfg.telemetry_max_pkt_instants),
+                            self._max_spans)
+        self._engine = sim.engine
+        # raw span/instant tuples (see module docstring for the shapes);
+        # per-packet instants (stragglers/collisions) collect in their own
+        # small capped log and merge into ``instants`` at finish()
+        self.spans: List[Tuple] = []
+        self.instants: List[Tuple] = []
+        self._pkt_instants: List[Tuple] = []
+        # plain attribute counters for the per-event hooks (surfaced by
+        # summary_dict; string-keyed registry counters are for rare events)
+        self.desc_allocs = 0
+        self.flush_timeout = 0
+        self.flush_complete = 0
+        self.blocks_started = 0
+        self.blocks_completed = 0
+        # set from the sim's own exact totals at finish(); the hooks never
+        # count these (they fire per packet — the sim already counts them)
+        self.collisions = 0
+        self.stragglers = 0
+        # hot-path gates, mirrored INTO the layers as pre-bound site state
+        # (strategy._tel_open / strategy._tel_pkt / hostproto._tel_left, see
+        # start()) so each hot site pays one attribute load + identity check;
+        # want_sends drops when every block has opened, want_pkt_instants
+        # when the per-packet instant log caps out — the hub then retracts
+        # the corresponding site attribute and the site goes fully cold
+        self.want_sends = self._spans_on
+        self.want_completes = self._spans_on
+        self.want_pkt_instants = self._spans_on and self._max_pkt > 0
+        # open block-lifecycle state, keyed (app << _APP_BITS_SHIFT) | block.
+        # ``block_open`` and ``block_left`` are PUBLIC: the two hottest call
+        # sites inline their common-case check/decrement against them and
+        # only call into the hub on the rare interesting transition (first
+        # send of a block, last completion of a block) — see
+        # AggregationStrategy.next_host_packet and
+        # HostProtocol.complete_at_host.
+        self.block_open: Dict[int, float] = {}
+        self._leader_done_t: Dict[int, float] = {}
+        self.block_left: Dict[int, List[int]] = {}  # filled in start()
+        self._strategy = None  # site owner for _tel_open/_tel_pkt (start())
+        # pre-created histograms, fed from raw value lists the hot hooks
+        # append to; :meth:`finish` replays the lists into the buckets
+        self._lat_hist = self.registry.hist("block/latency_ns")
+        self._win_hist = self.registry.hist("desc/window_ns")
+        self._lat_vals: List[float] = []
+        self._win_vals: List[float] = []
+        # bound in finalize()
+        self._links: List = []
+        self._link_ts: List = []
+        self._tables: List[dict] = []
+        self._sw_ts: List = []
+        self._sw_hi: List[int] = []
+        self._total_blocks = -1  # set in start(); -1 = never triggers swap
+        self._tp = None
+        self._tp_last: Dict[str, float] = {}
+        self.occupancy_model_bytes = 0.0
+        self.occupancy_model_descriptors = 0.0
+
+    # ------------------------------------------------------------- lifecycle
+    def finalize(self) -> None:
+        """Pre-resolve probe targets now that the layer graph exists."""
+        sim = self.sim
+        reg = self.registry
+        self._links = list(sim.net.all_links())
+        self._link_ts = [reg.ts(f"link/{i}/backlog_bytes")
+                         for i in range(len(self._links))]
+        self._tables = sim.switch.tables
+        # event-driven per-switch occupancy: series + exact high-waters
+        self._sw_ts = [reg.ts(f"switch/{i}/descriptors")
+                       for i in range(len(self._tables))]
+        self._sw_hi = [0] * len(self._tables)
+        self._tp = sim.transport
+        # the §3.2.2 analytic occupancy bound the probed series compares to
+        from ..canary.memory_model import model_for
+        model = model_for(self.cfg)
+        self.occupancy_model_bytes = float(model.occupancy_bytes)
+        self.occupancy_model_descriptors = float(
+            model.occupancy_bytes / self.cfg.mtu_bytes)
+
+    def start(self) -> None:
+        """Arm the probe chain (called once from ``Simulator.run``, after the
+        per-app participant maps exist — ``finalize`` runs too early)."""
+        sim = self.sim
+        # per-app flat countdown arrays: block_left[app][block] holds how
+        # many participant completions remain before the block span closes —
+        # the call site decrements inline and only calls on_block_complete
+        # when a block's count hits zero
+        self.block_left = {}
+        total_blocks = 0
+        for app, left in sim.app_remaining.items():
+            npart = sim.nparts[app]
+            if sim.jobs[app].collective == "reduce":
+                blocks, init = left, 1
+            else:
+                blocks, init = left // npart, npart
+            self.block_left[app] = [init] * blocks
+            total_blocks += blocks
+        # total distinct blocks across apps: once every one has opened,
+        # want_sends drops and the send site goes cold
+        self._total_blocks = total_blocks
+        if total_blocks == 0:
+            self.want_sends = False
+        # install the pre-bound site state in the layers: each hot site then
+        # gates on ONE instance attribute (dict-or-None / hub-or-None) that
+        # the hub retracts when the site stops being interesting
+        strat = self._strategy = sim.strategy
+        strat._tel_open = self.block_open if self.want_sends else None
+        strat._tel_pkt = self if self.want_pkt_instants else None
+        sim.hostproto._tel_left = \
+            self.block_left if self.want_completes else None
+        if self._probes_on:
+            self._engine.push(self._engine.now, EV_TELEMETRY_PROBE, 0, 0, None)
+
+    def handle_probe(self, a: int, b: int, c: object) -> None:
+        """Engine handler for EV_TELEMETRY_PROBE: sample, then re-arm one
+        cadence ahead — unless the run is over (stop flag) or this probe is
+        the only thing left queued (both heaps empty after the pop)."""
+        eng = self._engine
+        now = eng.now
+        self.probes += 1
+        self._sample(now)
+        if not eng.stop and (eng.heap or eng.timer_heap):
+            eng.push(now + self.probe_ns, EV_TELEMETRY_PROBE, 0, 0, None)
+
+    def finish(self) -> None:
+        """End-of-run consolidation, called from ``Simulator.run`` before the
+        result is built: take one closing probe sample (the probe chain dies
+        with the heaps, so without it the series could end one cadence before
+        the final completions drained), replay the raw latency/window value
+        lists into their histograms, and sync the per-switch series extrema
+        the inlined hooks maintained out-of-band."""
+        if self._probes_on:
+            self._sample(self._engine.now)
+        obs = self._lat_hist.observe
+        for v in self._lat_vals:
+            obs(v)
+        self._lat_vals.clear()
+        obs = self._win_hist.observe
+        for v in self._win_vals:
+            obs(v)
+        self._win_vals.clear()
+        # raise each sampled per-switch series' hi to the exact event-driven
+        # gauge (a probe can land between an alloc and its flush and miss
+        # the true peak)
+        for hi, ts in zip(self._sw_hi, self._sw_ts):
+            if ts.t and hi > ts.hi:
+                ts.hi = float(hi)
+        # collision/straggler totals come from the simulator's own counters
+        # (incremented at the exact same call sites, telemetry or not) —
+        # the hooks only log instants, so the hub never double-counts
+        self.collisions = int(self.sim.collisions)
+        self.stragglers = int(self.sim.stragglers)
+        # merge the per-packet instant log, still honoring the global cap;
+        # truncation past the pkt cap (the call sites stop calling once
+        # want_pkt_instants drops) is accounted here from the exact totals
+        # — never silent
+        if self._spans_on:
+            recorded = len(self._pkt_instants)
+            self.spans_dropped += \
+                self.stragglers + self.collisions - recorded
+            if recorded:
+                room = self._max_spans - len(self.instants)
+                if room > 0:
+                    self.instants.extend(self._pkt_instants[:room])
+                    self.spans_dropped += max(0, recorded - room)
+                else:
+                    self.spans_dropped += recorded
+                self._pkt_instants = []
+
+    # ---------------------------------------------------------------- probes
+    def _sample(self, now: float) -> None:
+        reg = self.registry
+        # per-link queue backlog (delta-encoded: idle links record one point)
+        hi = 0.0
+        total = 0.0
+        for link, ts in zip(self._links, self._link_ts):
+            b = link.busy_until - now
+            b = b * link.bytes_per_ns if b > 0.0 else 0.0
+            ts.record(now, b)
+            total += b
+            if b > hi:
+                hi = b
+        reg.record("net/backlog_max_bytes", now, hi)
+        reg.record("net/backlog_total_bytes", now, total)
+        # per-switch descriptor occupancy + the cross-switch max the
+        # OccupancyModel bound is compared against (the exact high-water
+        # gauge is event-driven at on_desc_alloc; these sampled series show
+        # the shape between allocs)
+        if self._tables:
+            occ_hi = 0
+            for sts, table in zip(self._sw_ts, self._tables):
+                n = len(table)
+                sts.record(now, n)
+                if n > occ_hi:
+                    occ_hi = n
+            reg.record("switch/max_descriptors", now, occ_hi)
+        # per-app outstanding completions (blocks still in flight)
+        for app, left in self.sim.app_remaining.items():
+            reg.record(f"app/{app}/remaining", now, left)
+        # transport counters -> cumulative series + per-us rates
+        tp = self._tp
+        if tp is not None:
+            last = self._tp_last
+            dt_us = self.probe_ns / 1e3
+            for attr in ("ecn_marks", "cnps", "pfc_pauses", "rate_cuts",
+                         "gbn_retx", "gbn_ooo"):
+                v = getattr(tp, attr, None)
+                if v is None:
+                    continue
+                reg.record(f"tp/{attr}", now, v)
+                prev = last.get(attr, 0.0)
+                reg.record(f"tp/{attr}_per_us", now, (v - prev) / dt_us)
+                last[attr] = v
+            cc = getattr(tp, "_cc", None)
+            if cc is not None:  # DCQCN: per-host pacing rate in Gb/s
+                for h, st in enumerate(cc):
+                    reg.record(f"host/{h}/rate_gbps", now, st.rate * 8.0)
+
+    # ------------------------------------------------------- span primitives
+    def _push_span(self, entry: Tuple) -> None:
+        if len(self.spans) < self._max_spans:
+            self.spans.append(entry)
+        else:
+            self.spans_dropped += 1
+
+    def _push_instant(self, entry: Tuple) -> None:
+        if len(self.instants) < self._max_spans:
+            self.instants.append(entry)
+        else:
+            self.spans_dropped += 1
+
+    # ------------------------------------------------------- lifecycle hooks
+    # The five hooks below run once per protocol event in the hottest loops,
+    # so they inline the span/series bookkeeping instead of going through
+    # _push_span / TimeSeries.record — every saved call is measurable
+    # against the perf budget.
+
+    def on_host_send(self, host: int, pkt) -> None:
+        """First REDUCE contribution of a block opens its lifecycle span.
+        The call site inlines the common-case rejection (block already open,
+        checked against the pre-bound ``_tel_open`` dict) and only calls
+        here once per distinct block; when the last block has opened the hub
+        retracts ``_tel_open`` and the send site goes fully cold."""
+        key = pkt.id >> GEN_BITS  # generation-free (app, block) packing
+        self.block_open[key] = self._engine.now
+        self.blocks_started += 1
+        if self.blocks_started == self._total_blocks:
+            self.want_sends = False
+            self._strategy._tel_open = None
+
+    def on_leader_done(self, host: int, app: int, block: int) -> None:
+        """The leader holds the fully-reduced block; broadcast begins."""
+        if self._spans_on:
+            now = self._engine.now
+            self._leader_done_t[(app << _APP_BITS_SHIFT) | block] = now
+            self._push_instant(("leader_done", app, block, host, now))
+
+    def on_block_complete(self, host: int, app: int, block: int) -> None:
+        """The LAST participant of a block holds the final result: close the
+        block span (and the leader-done -> done broadcast sub-span). The
+        call site decrements ``block_left[app][block]`` inline and calls
+        here only when the countdown hits zero — once per block, not once
+        per participant completion."""
+        key = (app << _APP_BITS_SHIFT) | block
+        now = self._engine.now
+        t0 = self.block_open.pop(key, None)
+        t_ld = self._leader_done_t.pop(key, None)
+        spans = self.spans
+        if t_ld is not None and t_ld < now:
+            if len(spans) < self._max_spans:
+                spans.append(("bcast", app, block, t_ld, now))
+            else:
+                self.spans_dropped += 1
+        if t0 is None:
+            t0 = t_ld  # host-based paths with no recorded first send
+        if t0 is not None:
+            if len(spans) < self._max_spans:
+                spans.append(("block", app, block, t0, now, host))
+            else:
+                self.spans_dropped += 1
+            self._lat_vals.append(now - t0)
+        self.blocks_completed += 1
+
+    # ------------------------------------------------------ descriptor hooks
+    def on_desc_alloc(self, sw: int, desc, occupancy: int) -> None:
+        """A descriptor landed in ``sw``'s table, which now holds
+        ``occupancy`` entries. Event-driven, so the per-switch high-water
+        gauge is exact regardless of the probe cadence (occupancy only ever
+        rises at an alloc, so deallocs need no hook at all); the per-switch
+        occupancy *series* is probe-sampled in :meth:`_sample` and finish()
+        raises each series' ``hi`` to the exact gauge."""
+        self.desc_allocs += 1
+        if occupancy > self._sw_hi[sw]:
+            self._sw_hi[sw] = occupancy
+
+    def on_desc_flush(self, sw: int, desc, reason: str) -> None:
+        """A descriptor forwarded its partial: ``reason`` is "complete"
+        (every expected child arrived) or "timeout" (the §3.1.1 best-effort
+        window expired). Closes the aggregation-window span."""
+        now = self._engine.now
+        if reason == "timeout":
+            self.flush_timeout += 1
+        else:
+            self.flush_complete += 1
+        self._win_vals.append(now - desc.alloc_ns)
+        if self._spans_on:
+            if len(self.spans) < self._max_spans:
+                pid = desc.id
+                self.spans.append(("desc", sw, pid >> APP_SHIFT,
+                                   (pid >> GEN_BITS) & _BLOCK_MASK, reason,
+                                   desc.counter, len(desc.children),
+                                   desc.alloc_ns, now))
+            else:
+                self.spans_dropped += 1
+
+    # --------------------------------------------------------- instant hooks
+    # Collisions and especially stragglers are per-*packet* events — a
+    # congested cell emits tens of thousands. The simulator already counts
+    # both at the same call sites (SimResult carries the authoritative
+    # totals, finish() copies them into the hub), so these hooks only log
+    # the capped instant tuples; once the log fills, ``want_pkt_instants``
+    # drops and the call sites stop calling entirely.
+    def on_collision(self, sw: int, pkt) -> None:
+        ins = self._pkt_instants
+        ins.append(("collision", sw, (pkt.id >> GEN_BITS) & _BLOCK_MASK,
+                    self._engine.now))
+        if len(ins) >= self._max_pkt:
+            self.want_pkt_instants = False
+            self._strategy._tel_pkt = None
+
+    def on_straggler(self, sw: int, pkt) -> None:
+        ins = self._pkt_instants
+        ins.append(("straggler", sw, (pkt.id >> GEN_BITS) & _BLOCK_MASK,
+                    self._engine.now))
+        if len(ins) >= self._max_pkt:
+            self.want_pkt_instants = False
+            self._strategy._tel_pkt = None
+
+    def on_drop(self, cause: str, where: int) -> None:
+        """A packet died: ``cause`` is "wire" (iid link loss) or
+        "switch_fail" (arrival at a dead switch)."""
+        self.registry.inc("drops/" + cause)
+        if self._spans_on:
+            self._push_instant(("drop", cause, where, self._engine.now))
+
+    def on_retx(self, what: str, host: int, app: int, block: int) -> None:
+        """Whole-block recovery traffic: ``what`` is "request" (a host asked
+        its leader) or "fail" (the leader re-issued the reduction)."""
+        self.registry.inc("retx/" + what)
+        if self._spans_on:
+            self._push_instant(("retx", what, app, host, block,
+                                self._engine.now))
+
+    def on_cnp(self, src: int, dst: int) -> None:
+        """DCQCN congestion-notification packet from receiver to sender."""
+        self.registry.inc("tp/cnp_sent")
+        if self._spans_on:
+            self._push_instant(("cnp", dst, src, self._engine.now))
+
+    def on_pfc(self, host: int, paused: bool) -> None:
+        self.registry.inc("tp/pfc_pause" if paused else "tp/pfc_resume")
+        if self._spans_on:
+            self._push_instant(("pfc", host, paused, self._engine.now))
+
+    def on_gbn(self, what: str, host: int, count: int = 1) -> None:
+        """Go-back-N recovery: ``what`` is "retx" (window resent on timer)
+        or "ooo" (out-of-order arrival discarded at the endpoint)."""
+        self.registry.inc("tp/gbn_" + what, count)
+        if self._spans_on:
+            self._push_instant(("gbn", what, host, count, self._engine.now))
+
+    # ---------------------------------------------------------------- digest
+    def desc_high_water(self) -> int:
+        """Exact max descriptor-table occupancy seen across all switches
+        (event-driven — cross-validated against
+        ``SimResult.max_descriptors_per_switch``)."""
+        return max(self._sw_hi, default=0)
+
+    def summary_dict(self) -> Dict[str, float]:
+        """Flat numeric digest for ``SimResult.telemetry_summary``."""
+        reg = self.registry
+        net = reg.series.get("net/backlog_max_bytes")
+        return {
+            "probes": float(self.probes),
+            "spans": float(len(self.spans)),
+            "instants": float(len(self.instants)),
+            "spans_dropped": float(self.spans_dropped),
+            "series": float(len(reg.series)),
+            "samples": float(reg.total_samples()),
+            "samples_dropped": float(reg.samples_dropped()),
+            "desc_high_water": float(self.desc_high_water()),
+            "max_link_backlog_bytes":
+                float(net.hi) if net is not None and len(net) else 0.0,
+            "occupancy_model_bytes": self.occupancy_model_bytes,
+            "occupancy_model_descriptors": self.occupancy_model_descriptors,
+            "desc/flush_timeout": float(self.flush_timeout),
+            "desc/flush_complete": float(self.flush_complete),
+            "desc/alloc": float(self.desc_allocs),
+            "switch/collisions": float(self.collisions),
+            "switch/stragglers": float(self.stragglers),
+            "blocks/started": float(self.blocks_started),
+            "blocks/completed": float(self.blocks_completed),
+        }

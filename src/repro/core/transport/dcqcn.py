@@ -92,6 +92,7 @@ class Dcqcn(TransportPolicy):
         self._xoff = float(cfg.pfc_pause_bytes)
         self._xon = float(cfg.pfc_resume_bytes)
         self._cc = [_HostCC(self._line) for _ in range(cfg.num_hosts)]
+        self._telemetry = sim.telemetry  # observation-only; None when off
         self._last_cnp: Dict[tuple, float] = {}  # (receiver, sender) -> t
         self._cnp_bytes = cfg.header_bytes + 8
         self.ecn_marks = 0
@@ -167,6 +168,8 @@ class Dcqcn(TransportPolicy):
                 self._hp.hosts[host].queue.append(cnp)
                 self._hp.schedule_pump(host, now)
                 self.cnps += 1
+                if self._telemetry is not None:
+                    self._telemetry.on_cnp(host, pkt.src)
         return pkt
 
     # ------------------------------------------------------- DCQCN rate logic
@@ -212,6 +215,8 @@ class Dcqcn(TransportPolicy):
             st.paused = True
             st.pause_start = self._engine.now
             self.pfc_pauses += 1
+            if self._telemetry is not None:
+                self._telemetry.on_pfc(a, True)
 
     def handle_pfc_resume(self, a: int, b: int, c: object) -> None:
         st = self._cc[a]
@@ -221,6 +226,8 @@ class Dcqcn(TransportPolicy):
             st.paused = False
             self.pfc_pause_ns += self._engine.now - st.pause_start
             self._hp.schedule_pump(a, self._engine.now)
+            if self._telemetry is not None:
+                self._telemetry.on_pfc(a, False)
         st.pause_pending = False
 
     # ------------------------------------------------------------- telemetry

@@ -85,6 +85,7 @@ class GoBackN(TransportPolicy):
         self._block_timeout = cfg.retx_timeout_ns
         self._ack_every = cfg.gbn_ack_every
         self._ack_bytes = cfg.header_bytes + 8
+        self._telemetry = sim.telemetry  # observation-only; None when off
         self._flows: Dict[Tuple[int, int], _PktFlow] = {}
         self._bflows: Dict[Tuple[int, int], _BlockFlow] = {}
         self._expected: Dict[Tuple[int, int], int] = {}  # (host, src) -> seq
@@ -146,6 +147,8 @@ class GoBackN(TransportPolicy):
             # cursor — go-back-N receivers discard both, and the immediate
             # duplicate cumulative ACK re-syncs the sender's window
             self.gbn_ooo += 1
+            if self._telemetry is not None:
+                self._telemetry.on_gbn("ooo", host, 1)
             if exp > 0:
                 self._send_ack(host, pkt.src, exp - 1)
             self._pool_free(pkt)
@@ -253,6 +256,8 @@ class GoBackN(TransportPolicy):
                 pkt.seq = s
                 hq.append(pkt)
                 self.gbn_retx += 1
+            if self._telemetry is not None:
+                self._telemetry.on_gbn("retx", a, len(f.unacked))
             self._push_timer(self._engine.now + self._timeout, EV_GBN_TIMER,
                              a, 0, ("p", key, epoch))
             self._hp.schedule_pump(a, self._engine.now)

@@ -1,0 +1,331 @@
+"""Contracts for the telemetry subsystem (ARCHITECTURE.md §Telemetry).
+
+Four layers of guarantees:
+
+* **Observation-only** — every golden replays bit-for-bit with the hub
+  enabled: probe ticks dispatch outside the pinned ``events`` count, hooks
+  never touch the core RNG or protocol state.
+* **Off = no object** — ``Simulator.telemetry`` is ``None`` by default and
+  ``SimResult.telemetry_summary`` stays empty; the off path is one pointer
+  compare per hook site.
+* **Exactness** — the event-driven descriptor series' high-water equals the
+  engine's own ``max_descriptors_per_switch`` on congested fat-tree and
+  three-tier cells, regardless of the probe cadence.
+* **Exporters** — the Perfetto trace-event JSON validates, carries timeout
+  -flush spans and per-link backlog counter tracks; the flat dumps
+  round-trip every sample.
+
+Plus the satellite pins for ``SimResult.summary()`` rendering (all drop
+causes, ``done=-`` for unfinished apps, the throttled-hosts segment).
+"""
+import dataclasses
+import json
+
+import pytest
+from golden_cases import (CASES, _cfg, _jobs, load_goldens,
+                          result_to_jsonable)
+
+from repro.core.canary import (Algo, AllreduceJob, SimResult, Simulator,
+                               scaled_config, three_tier_config)
+from repro.core.telemetry import (Telemetry, TimeSeries, run_headline_cell,
+                                  to_perfetto, validate_perfetto)
+from repro.core.telemetry.metrics import Histogram, MetricsRegistry
+
+
+def _build(name: str, **cfg_overrides) -> Simulator:
+    cfg_kw, jobs_spec, algo, n_trees, noise = CASES[name]
+    cfg = _cfg(**{**cfg_kw, **cfg_overrides})
+    return Simulator(cfg, _jobs(jobs_spec), algo=algo, n_trees=n_trees,
+                     noise_hosts=noise)
+
+
+# --------------------------------------------------------------------------
+# Observation-only: goldens replay bit-identical with the hub on
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_goldens_bit_identical_with_telemetry_on(name, goldens):
+    got = result_to_jsonable(_build(name, telemetry=True).run())
+    assert got == goldens[name], \
+        f"golden {name!r} diverged with telemetry enabled"
+
+
+def test_probe_cadence_does_not_perturb_goldens(goldens):
+    """An aggressive probe cadence (50ns) multiplies probe events ~200x;
+    the golden contract — including the event count — must still hold."""
+    name = "canary_congestion_noise"
+    sim = _build(name, telemetry=True, telemetry_probe_ns=50.0)
+    assert result_to_jsonable(sim.run()) == goldens[name]
+    assert sim.telemetry.probes > 100
+
+
+# --------------------------------------------------------------------------
+# Off = no object
+# --------------------------------------------------------------------------
+def test_telemetry_off_means_no_hub_object():
+    sim = _build("canary_basic")
+    assert sim.telemetry is None
+    res = sim.run()
+    assert res.telemetry_summary == {}
+
+
+def test_telemetry_on_populates_summary_digest():
+    sim = _build("canary_congestion_noise", telemetry=True)
+    res = sim.run()
+    s = res.telemetry_summary
+    assert s["probes"] >= 1
+    # the hub counts distinct blocks; SimResult counts per-participant
+    # completions (blocks x participants here)
+    assert s["blocks/completed"] == s["blocks/started"] > 0
+    assert res.completed_blocks % int(s["blocks/completed"]) == 0
+    assert s["desc/flush_timeout"] + s["desc/flush_complete"] > 0
+    # the digest is asdict-safe (sweep work items round-trip SimResult)
+    assert json.loads(json.dumps(dataclasses.asdict(res))) is not None
+
+
+def test_probes_and_spans_individually_gateable():
+    sim = _build("canary_basic", telemetry=True, telemetry_spans=False)
+    sim.run()
+    assert sim.telemetry.spans == [] and sim.telemetry.instants == []
+    assert sim.telemetry.probes >= 1
+    sim2 = _build("canary_basic", telemetry=True, telemetry_probes=False)
+    sim2.run()
+    assert len(sim2.telemetry.spans) > 0
+    assert "net/backlog_max_bytes" not in sim2.telemetry.registry.series
+
+
+# --------------------------------------------------------------------------
+# Exactness: occupancy cross-validation (ISSUE satellite 4)
+# --------------------------------------------------------------------------
+def _congested_fat_tree() -> Simulator:
+    cfg = scaled_config(4, seed=3, noise_prob=0.05, telemetry=True)
+    n = cfg.num_hosts
+    return Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), 1 << 17)],
+                     algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+
+
+def _congested_three_tier() -> Simulator:
+    cfg = three_tier_config(num_pods=4, leaves_per_pod=2, hosts_per_leaf=4,
+                            aggs_per_pod=2, num_cores=4, seed=11,
+                            telemetry=True)
+    n = cfg.num_hosts
+    return Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), 1 << 16)],
+                     algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+
+
+@pytest.mark.parametrize("build", [_congested_fat_tree, _congested_three_tier],
+                         ids=["fat_tree", "three_tier"])
+def test_descriptor_high_water_matches_engine_exactly(build):
+    """The event-driven per-switch occupancy series must reproduce the
+    engine's own high-water counter exactly — the probe cadence only affects
+    the sampled aggregate, never the per-switch series."""
+    sim = build()
+    res = sim.run()
+    assert res.correct
+    assert res.max_descriptors_per_switch > 0
+    tel = sim.telemetry
+    assert tel.desc_high_water() == res.max_descriptors_per_switch
+    assert tel.summary_dict()["desc_high_water"] == \
+        res.max_descriptors_per_switch
+    # per-switch series peaks agree with the exact gauge (pre-resolved
+    # series for switches that never allocate stay empty — skip those)
+    peaks = [int(ts.hi) for k, ts in tel.registry.series.items()
+             if k.startswith("switch/") and k.endswith("/descriptors")
+             and len(ts)]
+    assert max(peaks) == res.max_descriptors_per_switch
+    # and the analytic §3.2.2 bound is recorded alongside for comparison
+    assert tel.summary_dict()["occupancy_model_descriptors"] > 0
+
+
+def test_high_water_invariant_under_coarse_cadence():
+    """Same cell, probe cadence 100x coarser: identical high-water."""
+    fine = _congested_fat_tree()
+    fine.run()
+    cfg = scaled_config(4, seed=3, noise_prob=0.05, telemetry=True,
+                        telemetry_probe_ns=1_000_000.0)
+    n = cfg.num_hosts
+    coarse = Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), 1 << 17)],
+                       algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+    coarse.run()
+    assert coarse.telemetry.desc_high_water() == \
+        fine.telemetry.desc_high_water()
+
+
+# --------------------------------------------------------------------------
+# Exporters
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def headline_sim():
+    return run_headline_cell(scale=4, data_bytes=1 << 17)
+
+
+def test_perfetto_export_validates(headline_sim):
+    doc = to_perfetto(headline_sim.telemetry)
+    assert validate_perfetto(doc) == []
+    assert json.loads(json.dumps(doc)) == doc  # JSON-serializable as-is
+
+
+def test_perfetto_carries_timeout_spans_and_backlog_series(headline_sim):
+    doc = to_perfetto(headline_sim.telemetry)
+    ev = doc["traceEvents"]
+    timeout_spans = [e for e in ev if e.get("ph") == "b"
+                     and e.get("args", {}).get("reason") == "timeout"]
+    assert timeout_spans, "congested cell must show timeout flushes"
+    backlog = {e["name"] for e in ev if e.get("ph") == "C"
+               and e["name"].startswith("link/")}
+    assert len(backlog) > 1, "per-link backlog counter tracks expected"
+    blocks = [e for e in ev if e.get("ph") == "b" and e["cat"] == "block"]
+    assert len(blocks) == int(
+        headline_sim.telemetry_result.telemetry_summary["blocks/completed"])
+
+
+def test_validator_rejects_malformed_documents():
+    assert validate_perfetto([]) != []
+    assert validate_perfetto({"traceEvents": [{"ph": "?", "name": "x"}]})
+    # unbalanced async pair
+    bad = {"traceEvents": [
+        {"ph": "b", "cat": "c", "id": 1, "pid": 1, "tid": 0, "ts": 0.0,
+         "name": "s"}]}
+    assert any("unbalanced" in e for e in validate_perfetto(bad))
+
+
+def test_series_dumps_round_trip(headline_sim, tmp_path):
+    from repro.core.telemetry import write_series_csv, write_series_json
+    tel = headline_sim.telemetry
+    csv_path, json_path = tmp_path / "s.csv", tmp_path / "s.json"
+    n_csv = write_series_csv(tel, str(csv_path))
+    n_json = write_series_json(tel, str(json_path))
+    assert n_csv == n_json == tel.registry.total_samples()
+    lines = csv_path.read_text().splitlines()
+    assert lines[0] == "series,t_ns,value"
+    assert len(lines) == n_csv + 1
+    doc = json.loads(json_path.read_text())
+    assert set(doc) == set(tel.registry.series)
+
+
+# --------------------------------------------------------------------------
+# Metrics primitives
+# --------------------------------------------------------------------------
+def test_time_series_delta_encoding_and_cap():
+    ts = TimeSeries(cap=4)
+    for t, v in [(0, 1.0), (1, 1.0), (2, 1.0), (3, 2.0), (4, 2.0), (5, 9.0),
+                 (6, 0.5), (7, 3.0)]:
+        ts.record(t, v)
+    # repeats collapse; cap drops the tail but hi/lo track every offer
+    assert list(ts.points()) == [(0, 1.0), (3, 2.0), (5, 9.0), (6, 0.5)]
+    assert ts.dropped == 1
+    assert ts.hi == 9.0 and ts.lo == 0.5
+
+
+def test_histogram_power_of_two_buckets():
+    h = Histogram()
+    for v in (1.0, 2.0, 3.0, 1000.0):
+        h.observe(v)
+    d = h.to_dict()
+    assert d["count"] == 4 and d["max"] == 1000.0
+    assert h.mean == pytest.approx(251.5)
+    assert sum(h.buckets.values()) == 4
+
+
+def test_registry_counter_gauge_and_span_cap():
+    reg = MetricsRegistry(series_cap=8)
+    reg.inc("a")
+    reg.inc("a", 2.0)
+    assert reg.counters["a"] == 3.0
+    reg.gauge_max("g", 5)
+    reg.gauge_max("g", 3)
+    assert reg.gauges["g"] == 5
+    # the hub enforces the span cap and reports drops, never raises
+    sim = _build("canary_basic", telemetry=True, telemetry_max_spans=10)
+    sim.run()
+    tel = sim.telemetry
+    assert len(tel.spans) + len(tel.instants) <= 20
+    assert tel.spans_dropped > 0
+    assert tel.summary_dict()["spans_dropped"] == tel.spans_dropped
+
+
+# --------------------------------------------------------------------------
+# summary() rendering pins (ISSUE satellites 1 + 2)
+# --------------------------------------------------------------------------
+def _result(**kw) -> SimResult:
+    base = dict(duration_ns=12_500.0, start_ns=0.0,
+                goodput_gbps={0: 40.0}, correct=True, link_utilization=[],
+                avg_utilization=0.5, stragglers=0, collisions=0,
+                restorations=0, retransmissions=0, fallbacks=0,
+                max_descriptors_per_switch=4, max_descriptor_bytes=4096,
+                events=100, dropped_packets=0, completed_blocks=8,
+                job_finish_ns={0: 12_500.0})
+    base.update(kw)
+    return SimResult(**base)
+
+
+def test_summary_renders_every_drop_cause():
+    s = _result(drop_causes={"wire": 3, "switch_fail": 1,
+                             "gbn_ooo_discard": 7, "cosmic_ray": 2}).summary()
+    assert "drops[wire=3,switch_fail=1,gbn_ooo_discard=7,cosmic_ray=2]" in s
+    # empty mapping still renders the two core causes as zeros
+    assert "drops[wire=0,switch_fail=0]" in _result().summary()
+
+
+def test_summary_renders_dash_for_unfinished_apps():
+    s = _result(goodput_gbps={0: 40.0, 1: 0.0},
+                job_finish_ns={0: 12_500.0}).summary()
+    assert "app0[done=12.5us" in s
+    assert "app1[done=-" in s
+    assert "nan" not in s
+
+
+def test_summary_surfaces_throttled_hosts():
+    s = _result(transport="dcqcn",
+                transport_stats={"ecn_marks": 5, "cnps": 2},
+                host_rate_gbps={3: 25.0, 7: 12.5}).summary()
+    assert "throttled[2hosts min=12.5Gbps]" in s
+    # no throttled segment when every sender recovered to line rate
+    s2 = _result(transport="dcqcn", transport_stats={}).summary()
+    assert "throttled" not in s2
+    # and none of the transport segment without a policy
+    assert "tp=" not in _result().summary()
+
+
+# --------------------------------------------------------------------------
+# Fleet integration: per-tenant series
+# --------------------------------------------------------------------------
+def test_fleet_driver_merges_per_tenant_series():
+    from repro.core.canary import TenantSpec
+    from repro.core.fleet import FleetDriver, FleetScenario
+    cfg = scaled_config(4, seed=7, telemetry=True, telemetry_probe_ns=500.0)
+    jobs = [AllreduceJob(app=0, participants=[0, 1, 2, 3], data_bytes=16384,
+                         tenant=0),
+            AllreduceJob(app=1, participants=[4, 5, 6, 7], data_bytes=16384,
+                         tenant=0),
+            AllreduceJob(app=2, participants=[8, 9, 10, 11], data_bytes=16384,
+                         tenant=1)]
+    scenario = FleetScenario(
+        cfg=cfg, tenants=[TenantSpec(0), TenantSpec(1)], jobs=jobs,
+        quota_policy="none", baselines=False)
+    fr = FleetDriver(scenario).run()
+    assert fr.correct
+    assert set(fr.tenant_series) == {0, 1}
+    for t, series in fr.tenant_series.items():
+        assert series[-1][1] == 0.0, "all blocks drained by end of run"
+        assert max(v for _, v in series) > 0
+    # tenant 0 aggregates two apps, so its peak in-flight count is at least
+    # single-app tenant 1's
+    assert max(v for _, v in fr.tenant_series[0]) >= \
+        max(v for _, v in fr.tenant_series[1])
+
+
+def test_fleet_driver_skips_series_when_telemetry_off():
+    from repro.core.canary import TenantSpec
+    from repro.core.fleet import FleetDriver, FleetScenario
+    cfg = scaled_config(4, seed=7)
+    jobs = [AllreduceJob(app=0, participants=[0, 1, 2, 3], data_bytes=8192,
+                         tenant=0)]
+    fr = FleetDriver(FleetScenario(cfg=cfg, tenants=[TenantSpec(0)],
+                                   jobs=jobs, quota_policy="none",
+                                   baselines=False)).run()
+    assert fr.tenant_series == {}

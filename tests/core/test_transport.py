@@ -258,7 +258,7 @@ def test_drop_causes_attribute_switch_failures():
 def test_summary_carries_drop_causes_and_transport_counters():
     res = _congested_dcqcn()
     s = res.summary()
-    assert "drops[wire=" in s and "switch=" in s
+    assert "drops[wire=" in s and "switch_fail=" in s
     assert "tp=dcqcn[" in s and "ecn=" in s and "cnp=" in s
     none_s = _run(scaled_config(4), n_hosts=8).summary()
     assert "tp=" not in none_s, "default path stays free of transport noise"

@@ -107,6 +107,16 @@ def test_flow_backend_refuses_non_default_transport(transport):
         lower_item(item)
 
 
+def test_flow_backend_refuses_telemetry():
+    """Same honesty rule for the telemetry hub: the flow model has no
+    packets, descriptors or probe events to observe."""
+    from repro.core.flow.model import lower_item
+    item = _item()
+    item["cfg"]["telemetry"] = True
+    with pytest.raises(ValueError, match="telemetry"):
+        lower_item(item)
+
+
 # --------------------------------------------------------------------------
 # Batching contract (jax)
 # --------------------------------------------------------------------------
@@ -186,9 +196,11 @@ def test_canary_and_flow_import_jax_free():
         "import repro.core.canary as c\n"
         "import repro.core.flow as f\n"
         "import repro.core.transport as t\n"
+        "import repro.core.telemetry as tm\n"
         "from repro.core.flow.model import lower_item, solve_cell\n"
         "from repro.core.canary import BACKENDS, get_backend\n"
         "from repro.core.transport import TRANSPORTS, make_transport\n"
+        "from repro.core.telemetry import Telemetry, to_perfetto\n"
         "assert 'flow' in BACKENDS and 'packet' in BACKENDS\n"
         "assert 'gbn' in TRANSPORTS and 'dcqcn' in TRANSPORTS\n"
         "get_backend('packet')\n"
