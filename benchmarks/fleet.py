@@ -10,13 +10,19 @@ fairness index across tenants, and degradation counts. Every cell also
 asserts exactness — a fleet run is a correctness proof, not just a timing.
 
 Writes ``FLEET_RESULTS.json`` (``FLEET_JSON=`` to move it); registered as
-the ``fleet`` suite in ``benchmarks/run.py``.
+the ``fleet`` suite in ``benchmarks/run.py``. ``--diagnose`` re-runs one
+representative congested cell with the telemetry hub enabled and attaches
+its critical-path cause attribution + per-tenant hotspot ranking
+(ARCHITECTURE.md §Diagnosis) to the JSON under ``"diagnosis"``.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
 import os
 import random
+import sys
 from typing import List
 
 from repro.core.canary import Algo, TenantSpec, three_tier_config
@@ -59,7 +65,28 @@ def _scenario(cfg, tenants, mean_interarrival_ns: float, algo: Algo,
                          quota_policy=policy)
 
 
-def main() -> None:
+def _diagnose_cell():
+    """One representative congested cell (fat_tree, CANARY, weighted quotas)
+    re-run with telemetry spans on; returns the diagnosis report dict."""
+    from repro.core.fleet import FleetDriver
+    topo, cfg = next(_topologies())
+    cfg = dataclasses.replace(cfg, telemetry=True, telemetry_spans=True)
+    scenario = _scenario(cfg, _tenants(4), 20_000.0, Algo.CANARY,
+                         "weighted", seed=1)
+    fr = FleetDriver(scenario).run()
+    print(fr.diagnosis.to_text())
+    doc = fr.diagnosis.to_json()
+    doc["cell"] = f"fleet/{topo}/canary/tenants=4/rate=20us/quota=weighted"
+    return doc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--diagnose", action="store_true",
+                    help="attach the telemetry-backed diagnosis of one "
+                         "representative cell to the results JSON")
+    # benchmarks.run invokes main() with no argv; never read sys.argv there
+    args = ap.parse_args(argv or [])
     from repro.core.fleet import FleetDriver
     tenant_counts = (4,) if FAST else (4, 8)
     rates_ns = (20_000.0,) if FAST else (20_000.0, 5_000.0)
@@ -91,6 +118,8 @@ def main() -> None:
                             "quota_policy": policy,
                             "jobs": len(fr.jobs),
                             "mean_jct_ns": fr.mean_jct_ns,
+                            "p50_jct_ns": fr.p50_jct_ns,
+                            "p99_jct_ns": fr.p99_jct_ns,
                             "max_jct_ns": fr.max_jct_ns,
                             "mean_slowdown": fr.mean_slowdown,
                             "jain_fairness": fr.jain_fairness,
@@ -102,6 +131,8 @@ def main() -> None:
                             "wall_us": us,
                         })
     doc = {"suite": "fleet", "fast": FAST, "cells": cells}
+    if args.diagnose:
+        doc["diagnosis"] = _diagnose_cell()
     path = os.environ.get("FLEET_JSON", "FLEET_RESULTS.json")
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=1, sort_keys=True)
@@ -113,4 +144,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -176,8 +176,27 @@ def _headline_sim(telemetry: bool) -> Simulator:
                      algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
 
 
-TELEMETRY_AB_REPS = 15  # pairs; resolving a 5% budget needs many more
-#                         samples than the throughput cells (MICRO_REPS)
+TELEMETRY_AB_REPS = 63 if FAST else 15  # pairs; resolving a 5% budget needs
+#                         many more samples than the throughput cells
+#                         (MICRO_REPS) — and at FAST scale the runs are
+#                         cheap enough to multiply the sample count, which
+#                         is exactly where the shorter runs need it. The
+#                         sweep is deliberately long enough (minutes, not
+#                         seconds) to SPAN the slow machine-regime drift a
+#                         shared box exhibits, so the median-of-pairs lands
+#                         on the regime-typical ratio instead of whichever
+#                         regime a short sweep happened to start in
+TELEMETRY_AB_RUNS_PER_ARM = 3  # back-to-back runs per arm sample, the arm
+#                                taking the MINIMUM: a single headline run
+#                                is short enough (~40 ms at FAST scale)
+#                                that one scheduler burst inside one arm
+#                                swings that pair's ratio by 10%+. Timing
+#                                noise on a shared box is additive-positive
+#                                (steal, interrupts, frequency dips), so
+#                                the min of K runs is the best estimate of
+#                                the undisturbed run — a sum would average
+#                                every burst back in at 1/K instead of
+#                                discarding it
 
 
 def _run_telemetry_ab() -> Dict[str, object]:
@@ -195,7 +214,10 @@ def _run_telemetry_ab() -> Dict[str, object]:
     resolved on a shared box, the median rejects the occasional pair
     where a noise burst lands inside exactly one arm, and the arm order
     alternates pair-to-pair so any systematic first-run advantage (turbo
-    decay, cache warm-up) cancels instead of biasing one arm. The
+    decay, cache warm-up) cancels instead of biasing one arm. Each arm
+    sample is the MINIMUM CPU time of ``TELEMETRY_AB_RUNS_PER_ARM``
+    back-to-back runs — noise is additive-positive, so the min discards a
+    burst outright where a sum would average it back in at 1/K. The
     min-of-N rows are kept for the absolute throughput numbers."""
     import gc
     import statistics
@@ -204,19 +226,35 @@ def _run_telemetry_ab() -> Dict[str, object]:
     for rep in range(TELEMETRY_AB_REPS):
         pair: Dict[bool, float] = {}
         for tel in ((False, True) if rep % 2 == 0 else (True, False)):
-            sim = _headline_sim(tel)
-            gc.collect()
-            c0 = time.process_time()
-            t0 = time.perf_counter()
-            res = sim.run()
-            wall = time.perf_counter() - t0
-            cpu = time.process_time() - c0
-            assert res.correct, "telemetry A/B cell: reduction not exact"
-            pair[tel] = cpu
-            row = {"wall_s": wall, "cpu_s": cpu, "events": float(res.events),
-                   "probes": res.telemetry_summary.get("probes", 0.0)}
-            if best[tel] is None or cpu < best[tel]["cpu_s"]:
-                best[tel] = row
+            arm_cpu = float("inf")
+            for _ in range(TELEMETRY_AB_RUNS_PER_ARM):
+                sim = _headline_sim(tel)
+                # GC fully off for the timed window (run() sees it disabled
+                # and leaves it so): the engine defers a whole run's worth
+                # of allocation debt, and letting the threshold-triggered
+                # collection land inside exactly one arm of a pair is the
+                # single largest noise term this estimator has to fight —
+                # a full gen-2 pass is the same order as the budget being
+                # resolved. The engine allocates no reference cycles, so
+                # plain refcounting reclaims everything; the explicit
+                # collect below just resets the counters outside the clock.
+                gc.collect()
+                gc.disable()
+                c0 = time.process_time()
+                t0 = time.perf_counter()
+                res = sim.run()
+                wall = time.perf_counter() - t0
+                cpu = time.process_time() - c0
+                gc.enable()
+                assert res.correct, "telemetry A/B cell: reduction not exact"
+                if cpu < arm_cpu:
+                    arm_cpu = cpu
+                row = {"wall_s": wall, "cpu_s": cpu,
+                       "events": float(res.events),
+                       "probes": res.telemetry_summary.get("probes", 0.0)}
+                if best[tel] is None or cpu < best[tel]["cpu_s"]:
+                    best[tel] = row
+            pair[tel] = arm_cpu
         ratios.append(pair[True] / pair[False] - 1.0)
     off, on = best[False], best[True]
     assert off is not None and on is not None
@@ -227,7 +265,8 @@ def _run_telemetry_ab() -> Dict[str, object]:
     overhead = statistics.median(ratios)
     return {"off": off, "on": on, "overhead": overhead,
             "overhead_min_ratio": on["cpu_s"] / off["cpu_s"] - 1.0,
-            "pairs": len(ratios), "budget": TELEMETRY_BUDGET,
+            "pairs": len(ratios), "runs_per_arm": TELEMETRY_AB_RUNS_PER_ARM,
+            "budget": TELEMETRY_BUDGET,
             "within_budget": overhead <= TELEMETRY_BUDGET}
 
 
@@ -315,6 +354,18 @@ def _profile_key() -> str:
 
 def run_cells() -> Dict[str, Dict]:
     cells: Dict[str, Dict] = {}
+    # the telemetry A/B resolves a few-percent budget out of sub-second
+    # runs, so it goes FIRST: after the micro/macro cells have churned tens
+    # of millions of allocations through the heap, the on-arm's extra
+    # allocations read systematically worse than they do in the fresh
+    # process a user (or the budget's original calibration) measures in
+    tel = _run_telemetry_ab()
+    cells["telemetry/headline_ab"] = tel
+    emit("perf/telemetry/headline_ab", tel["on"]["wall_s"] * 1e6,
+         f"overhead={tel['overhead'] * 100:.1f}%;"
+         f"budget={TELEMETRY_BUDGET * 100:.0f}%;"
+         f"within_budget={tel['within_budget']};"
+         f"probes={int(tel['on']['probes'])}")
     for name in MICRO_CELLS:
         row = _run_micro(name)
         cells[f"micro/{name}"] = row
@@ -323,13 +374,6 @@ def run_cells() -> Dict[str, Dict]:
              f"events_per_sec={row['live']['events_per_sec']:,.0f};"
              f"pre_pr={row['baseline']['events_per_sec']:,.0f};"
              f"speedup={row['speedup']:.2f}x")
-    tel = _run_telemetry_ab()
-    cells["telemetry/headline_ab"] = tel
-    emit("perf/telemetry/headline_ab", tel["on"]["wall_s"] * 1e6,
-         f"overhead={tel['overhead'] * 100:.1f}%;"
-         f"budget={TELEMETRY_BUDGET * 100:.0f}%;"
-         f"within_budget={tel['within_budget']};"
-         f"probes={int(tel['on']['probes'])}")
     for name, fn in MACRO_CELLS.items():
         wall, derived = fn()
         cells[f"macro/{name}"] = {"wall_s": wall}

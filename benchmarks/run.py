@@ -21,9 +21,11 @@ import time
 import traceback
 
 
-def _telemetry_cell(trace_out) -> None:
+def _telemetry_cell(trace_out, diagnose_out=None, run_diagnosis=False) -> None:
     """--telemetry: the instrumented headline cell (see ISSUE/ARCHITECTURE:
-    congested fat-tree, CANARY, background noise) + optional Perfetto dump."""
+    congested fat-tree, CANARY, background noise) + optional Perfetto dump.
+    With --diagnose, also prints the critical-path attribution report
+    (ARCHITECTURE.md §Diagnosis) and optionally writes the machine JSON."""
     from repro.core.telemetry import (run_headline_cell, validate_perfetto,
                                       write_perfetto)
     fast = os.environ.get("BENCH_FAST")
@@ -40,6 +42,14 @@ def _telemetry_cell(trace_out) -> None:
             raise SystemExit(f"invalid trace: {errs[:3]}")
         print(f"# wrote {trace_out} ({len(doc['traceEvents'])} events)",
               file=sys.stderr, flush=True)
+    if run_diagnosis or diagnose_out:
+        from repro.core.telemetry import diagnose, view_of
+        diag = diagnose(view_of(sim.telemetry))
+        print(diag.to_text())
+        if diagnose_out:
+            with open(diagnose_out, "w") as fh:
+                json.dump(diag.to_json(), fh, indent=1)
+            print(f"# wrote {diagnose_out}", file=sys.stderr, flush=True)
 
 
 def main(argv=None) -> None:
@@ -53,9 +63,16 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="with --telemetry: write the Perfetto trace-event "
                          "JSON here (load in ui.perfetto.dev)")
+    ap.add_argument("--diagnose", action="store_true",
+                    help="with --telemetry: print the critical-path cause "
+                         "attribution + hotspot report for the cell")
+    ap.add_argument("--diagnose-out", metavar="PATH", default=None,
+                    help="with --diagnose: write the machine-readable "
+                         "diagnosis report JSON here")
     args = ap.parse_args(argv)
-    if args.telemetry or args.trace_out:
-        _telemetry_cell(args.trace_out)
+    if args.telemetry or args.trace_out or args.diagnose or args.diagnose_out:
+        _telemetry_cell(args.trace_out, diagnose_out=args.diagnose_out,
+                        run_diagnosis=args.diagnose)
         return
     from . import (collective_bench, common, fig2_overview, fig6_single_switch,
                    fig7_static_vs_canary, fig8_congestion_intensity,

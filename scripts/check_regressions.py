@@ -1,0 +1,167 @@
+"""Perf-regression gate: compare benchmark artifacts against baselines.
+
+Usage::
+
+    # after `python -m benchmarks.perf` / `python -m benchmarks.run`
+    PYTHONPATH=src python scripts/check_regressions.py
+
+    # explicit locations
+    PYTHONPATH=src python scripts/check_regressions.py \
+        --baselines benchmarks/regression_baselines.json --dir .
+
+Reads the committed baseline file (``benchmarks/regression_baselines.json``)
+and checks every constraint against the named result JSONs
+(``PERF_RESULTS.json``, ``BENCH_RESULTS.json``, ...). Exits non-zero on any
+breach — CI runs this as the regression-gate step on the FAST bench
+artifacts.
+
+Baseline schema (per file)::
+
+    {"files": {
+       "PERF_RESULTS.json": {
+          "profile_key": "fast",          # doc[profile_key] picks fast/full
+          "any":  {"<dotted.path>": CONSTRAINT, ...},   # both profiles
+          "fast": {...},                                 # doc[key] truthy
+          "full": {...}                                  # doc[key] falsy
+       }}}
+
+``<dotted.path>`` navigates nested dicts (path components may contain ``/``
+— only ``.`` separates). CONSTRAINT is one object with any of:
+
+* ``{"min": x}`` / ``{"max": x}`` — bound a numeric cell. Use for metrics
+  that survive machine variance: speedup *ratios* (A/B in one process),
+  overhead budgets, and loose pathology ceilings on wall-clock.
+* ``{"ref": x, "rel_tol": t}`` — ``|v - ref| <= t * max(|ref|, eps)``.
+  With ``rel_tol: 0`` this pins determinism-backed values exactly (event
+  counts: the simulator is deterministic, so FAST-profile counts are
+  machine-independent; update the baseline deliberately when a PR changes
+  protocol behavior).
+* ``{"equals": v}`` — exact equality (booleans, strings).
+* ``{"empty": true}`` — the cell must be an empty list/dict.
+* ``"reason": "..."`` — ignored; documents why the cell is gated.
+
+A file listed in the baselines but absent on disk is skipped with a notice
+(so the gate runs on whatever subset of artifacts a step produced); pass
+``--require-all`` to make absence itself a failure. A *path* missing inside
+a present file is always a breach — the artifact schema regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Tuple
+
+_EPS = 1e-12
+
+
+def _lookup(doc, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return cur
+
+
+def check_constraint(value, spec: dict) -> Tuple[bool, str]:
+    """Evaluate one constraint; returns (ok, human description)."""
+    desc = []
+    ok = True
+    if "min" in spec:
+        desc.append(f">= {spec['min']}")
+        ok &= isinstance(value, (int, float)) and value >= spec["min"]
+    if "max" in spec:
+        desc.append(f"<= {spec['max']}")
+        ok &= isinstance(value, (int, float)) and value <= spec["max"]
+    if "ref" in spec:
+        tol = float(spec.get("rel_tol", 0.0))
+        desc.append(f"= {spec['ref']} ±{tol * 100:g}%")
+        ok &= isinstance(value, (int, float)) and \
+            abs(value - spec["ref"]) <= tol * max(abs(spec["ref"]), _EPS)
+    if "equals" in spec:
+        desc.append(f"== {spec['equals']!r}")
+        ok &= value == spec["equals"]
+    if "empty" in spec:
+        desc.append("empty")
+        ok &= hasattr(value, "__len__") and len(value) == 0
+    return ok, " and ".join(desc) or "(no constraint)"
+
+
+def check_file(path: str, rules: dict) -> List[Tuple[str, str, str, bool]]:
+    """Check one artifact; returns rows (path, value, constraint, ok)."""
+    with open(path) as f:
+        doc = json.load(f)
+    profiles = {"any"}
+    key = rules.get("profile_key")
+    if key is not None:
+        profiles.add("fast" if doc.get(key) else "full")
+    rows = []
+    for profile in ("any", "fast", "full"):
+        if profile not in profiles:
+            continue
+        for dotted, spec in sorted(rules.get(profile, {}).items()):
+            try:
+                value = _lookup(doc, dotted)
+            except KeyError:
+                rows.append((dotted, "<missing>",
+                             "path must exist in artifact", False))
+                continue
+            ok, desc = check_constraint(value, spec)
+            shown = value if not isinstance(value, float) \
+                else f"{value:.6g}"
+            rows.append((dotted, str(shown), desc, ok))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "benchmarks",
+                                         "regression_baselines.json"))
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the result JSONs (default: .)")
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail if any baselined artifact file is absent")
+    ap.add_argument("files", nargs="*",
+                    help="check only these artifact names (default: every "
+                         "file named in the baselines)")
+    args = ap.parse_args(argv)
+
+    with open(args.baselines) as f:
+        base = json.load(f)
+    files = base.get("files", {})
+    if args.files:
+        unknown = [f for f in args.files if f not in files]
+        if unknown:
+            print(f"no baselines for: {unknown}", file=sys.stderr)
+            raise SystemExit(2)
+        files = {k: files[k] for k in args.files}
+
+    breaches = 0
+    checked = 0
+    for name, rules in sorted(files.items()):
+        path = os.path.join(args.dir, name)
+        if not os.path.exists(path):
+            if args.require_all:
+                print(f"MISSING {name}: artifact not found")
+                breaches += 1
+            else:
+                print(f"skip {name}: not present")
+            continue
+        print(f"{name}:")
+        for dotted, shown, desc, ok in check_file(path, rules):
+            checked += 1
+            mark = "ok  " if ok else "FAIL"
+            print(f"  {mark} {dotted} = {shown}  (want {desc})")
+            if not ok:
+                breaches += 1
+    print(f"{checked} cells checked, {breaches} breach(es)")
+    if breaches:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Diagnose a run: critical-path slowdown attribution + hotspot ranking.
+
+Usage::
+
+    # diagnose an exported telemetry dump (scripts/export_telemetry.py --dump)
+    PYTHONPATH=src python scripts/diagnose.py --dump telemetry_dump.json
+
+    # or run a live instrumented cell and diagnose it in one step
+    PYTHONPATH=src python scripts/diagnose.py --scenario headline --scale 8
+
+    # machine-readable output for CI / tooling
+    PYTHONPATH=src python scripts/diagnose.py --scenario hot_link \
+        --json diagnosis_report.json
+
+Prints the human "why was this slow" report (ARCHITECTURE.md §Diagnosis):
+per-cause share of the critical path under the closed taxonomy
+(wire / queueing / timeout_flush / collision_bypass / retx_recovery /
+dcqcn_pacing / pfc_pause / bcast_tail / other, conservation property-tested),
+the top congestion hotspots by mean queueing delay, and per-app/per-tenant
+breakdowns. ``--json`` additionally writes the full machine report.
+
+``--expect-top CAUSE`` exits non-zero unless CAUSE is the top contributor —
+the injected-bottleneck scenarios below use it as their acceptance check:
+
+* ``headline``    — the congested headline cell (background traffic + noise)
+* ``hot_link``    — single-spine fat tree: all cross-leaf traffic shares one
+  known uplink (expected top cause: ``queueing``)
+* ``collisions``  — ``table_size=1``: every concurrent block collides and
+  bypasses (expected: ``collision_bypass``)
+* ``loss_gbn``    — lossy wire under go-back-N (expected: ``retx_recovery``)
+* ``dcqcn``       — aggressive ECN marking + slow rate recovery (expected:
+  ``dcqcn_pacing``)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.telemetry import diagnose, load_dump, view_of
+
+# injected-bottleneck scenario presets: each makes ONE cause dominant on
+# purpose; tests/core/test_diagnosis.py pins that the diagnosis names it
+SCENARIOS = {
+    "headline": {"expect": None, "overrides": {}},
+    # one spine: every cross-leaf packet serializes through leaf*->spine0,
+    # and a long descriptor timeout keeps timeout_flush out of the picture
+    "hot_link": {"expect": "queueing",
+                 "overrides": {"num_spines": 1, "timeout_ns": 5e5,
+                               "noise_prob": 0.0}},
+    # a one-slot descriptor table: concurrent blocks always collide and
+    # bypass to the leader (no background blast — the bottleneck is the
+    # leader convoy itself; the default 1us descriptor timeout keeps the
+    # slot churning so collisions stay the dominant mechanism); raise the
+    # pkt-instant cap so the evidence instants actually get recorded
+    "collisions": {"expect": "collision_bypass", "background": False,
+                   "overrides": {"table_size": 1, "noise_prob": 0.0,
+                                 "telemetry_max_pkt_instants": 200000,
+                                 "telemetry_max_spans": 300000}},
+    # iid wire loss under go-back-N: recovery stalls of gbn_timeout_ns
+    # dominate the block spans
+    "loss_gbn": {"expect": "retx_recovery",
+                 "overrides": {"transport": "gbn", "drop_prob": 2e-3,
+                               "noise_prob": 0.0, "timeout_ns": 5e5}},
+    # DCQCN with hair-trigger ECN marking, deep cuts and glacial recovery:
+    # hosts spend the run paced far below line rate
+    "dcqcn": {"expect": "dcqcn_pacing",
+              "overrides": {"transport": "dcqcn", "noise_prob": 0.0,
+                            "timeout_ns": 5e5,
+                            "ecn_kmin_bytes": 4096,
+                            "ecn_kmax_bytes": 16384,
+                            "ecn_pmax": 1.0}},
+}
+
+
+def run_scenario(name: str, scale: int, data_bytes: int, seed: int):
+    from repro.core.telemetry import run_headline_cell
+    spec = SCENARIOS[name]
+    return run_headline_cell(scale=scale, data_bytes=data_bytes, seed=seed,
+                             background=spec.get("background", True),
+                             **spec["overrides"])
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--dump", default=None,
+                     help="telemetry dump JSON "
+                          "(scripts/export_telemetry.py --dump)")
+    src.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                     help="run a live instrumented cell and diagnose it")
+    ap.add_argument("--scale", type=int, default=8,
+                    help="fabric scale for --scenario (default 8)")
+    ap.add_argument("--data-bytes", type=int, default=1 << 20)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--top-links", type=int, default=10,
+                    help="hotspot links to report (default 10)")
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--expect-top", default=None,
+                    help="exit 1 unless this cause is the top contributor "
+                         "(default for a --scenario: its injected cause)")
+    args = ap.parse_args(argv)
+
+    if args.dump:
+        view = load_dump(args.dump)
+        expect = args.expect_top
+    else:
+        scenario = args.scenario or "headline"
+        sim = run_scenario(scenario, args.scale, args.data_bytes, args.seed)
+        print(sim.telemetry_result.summary())
+        view = view_of(sim.telemetry)
+        expect = args.expect_top or SCENARIOS[scenario]["expect"]
+
+    diag = diagnose(view, top_links=args.top_links)
+    print(diag.to_text())
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(diag.to_json(), f, indent=1)
+        print(f"wrote {args.json}")
+
+    if expect:
+        top = diag.top_cause()
+        if top != expect:
+            print(f"FAIL: expected top cause {expect!r}, diagnosed {top!r}",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: top cause is {top!r} as expected")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,8 @@ then writes:
   *hosts*, and every probe series as a counter track.
 * ``--csv``  — flat ``series,t_ns,value`` rows for pandas/gnuplot.
 * ``--series-json`` — the same series as one JSON object (with hi/lo).
+* ``--dump`` — full-fidelity telemetry dump (spans, instants, series,
+  metadata, truncation) — the input format of ``scripts/diagnose.py``.
 
 The emitted trace is schema-checked (``validate_perfetto``) before the
 script exits 0 — CI runs this as the telemetry smoke step.
@@ -26,8 +28,8 @@ import argparse
 import sys
 
 from repro.core.telemetry import (run_headline_cell, validate_perfetto,
-                                  write_perfetto, write_series_csv,
-                                  write_series_json)
+                                  write_dump, write_perfetto,
+                                  write_series_csv, write_series_json)
 
 
 def main(argv=None) -> None:
@@ -45,6 +47,9 @@ def main(argv=None) -> None:
     ap.add_argument("--csv", default=None, help="flat series CSV path")
     ap.add_argument("--series-json", default=None,
                     help="series-as-JSON path (includes per-series hi/lo)")
+    ap.add_argument("--dump", default=None,
+                    help="full-fidelity dump path (scripts/diagnose.py "
+                         "input)")
     args = ap.parse_args(argv)
 
     overrides = {}
@@ -72,6 +77,12 @@ def main(argv=None) -> None:
     if args.series_json:
         n = write_series_json(sim.telemetry, args.series_json)
         print(f"wrote {args.series_json} ({n} samples)")
+    if args.dump:
+        doc = write_dump(sim.telemetry, args.dump)
+        print(f"wrote {args.dump} ({len(doc['spans'])} spans, "
+              f"{len(doc['instants'])} instants, "
+              f"{len(doc['series'])} series) "
+              f"-> diagnose with scripts/diagnose.py --dump {args.dump}")
 
 
 if __name__ == "__main__":

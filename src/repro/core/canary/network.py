@@ -402,3 +402,12 @@ class FatTree(Topology):
         for row in self.leaf_down:
             out.extend(row)
         return out
+
+    def link_names(self) -> List[str]:
+        out = [f"host{h}->leaf{h // self.H}" for h in range(self.num_hosts)]
+        out += [f"leaf{h // self.H}->host{h}" for h in range(self.num_hosts)]
+        for leaf in range(self.L):
+            out += [f"leaf{leaf}->spine{s}" for s in range(self.S)]
+        for leaf in range(self.L):
+            out += [f"spine{s}->leaf{leaf}" for s in range(self.S)]
+        return out

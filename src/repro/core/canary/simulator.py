@@ -85,15 +85,6 @@ class Simulator:
             from ..trace.recorder import TraceRecorder  # deferred: optional
             self.trace = TraceRecorder(self)
 
-        # opt-in telemetry (repro.core.telemetry): the same observation-only
-        # deal as the trace recorder — ``None`` when off, so every layer
-        # hook site is one guarded identity check, and on-runs replay the
-        # goldens bit-for-bit (probe ticks are outside the events count).
-        self.telemetry = None
-        if cfg.telemetry:
-            from ..telemetry.hub import Telemetry  # deferred: optional
-            self.telemetry = Telemetry(self)
-
         # layers (construction order matters: strategies touch hostproto)
         self.switch = SwitchLayer(self, self.net.num_switches)
         self.hostproto = HostProtocol(self, cfg.num_hosts)
@@ -107,6 +98,18 @@ class Simulator:
             from ..transport import make_transport
             self.transport = make_transport(cfg.transport, self)
         self.strategy = make_strategy(self.algo, self)
+        # opt-in telemetry (repro.core.telemetry): the same observation-only
+        # deal as the trace recorder — ``None`` when off, so every layer
+        # hook site is one guarded identity check, and on-runs replay the
+        # goldens bit-for-bit (probe ticks are outside the events count).
+        # Built AFTER the layers on purpose: the hub's own object graph
+        # (registry, per-link series, span state) must not interleave with
+        # the hot layer structures on the heap — layers resolve it in their
+        # finalize step, never at construction.
+        self.telemetry = None
+        if cfg.telemetry:
+            from ..telemetry.hub import Telemetry  # deferred: optional
+            self.telemetry = Telemetry(self)
         # finalize: every layer pre-resolves its per-packet callables now
         # that the full layer graph exists (ARCHITECTURE.md §Performance)
         self.switch.finalize()
@@ -356,11 +359,16 @@ class Simulator:
         self.engine.stop = self.all_done()
         try:
             self.engine.run(handlers, cfg.max_events)
+            if tel is not None:
+                # freezes exact summary totals. Cheap by design
+                # (O(counters + one pass over the flush log)); the closing
+                # probe sample and the heavy span/instant decode defer to
+                # the first reader of tel.spans/instants/registry (see
+                # hub docstring)
+                tel.finish()
         finally:
             if gc_was_enabled:
                 gc.enable()
-        if tel is not None:
-            tel.finish()  # closing probe sample: series end at final state
         end = max(self.app_done_ns.values()) if self.app_done_ns else self.now
         utils = self.net.utilizations(end if end > 0 else 1.0)
         goodput = {}

@@ -198,11 +198,13 @@ class AggregationStrategy:
     # telemetry site state, installed by Telemetry.start() and retracted by
     # the hub when a site goes cold (all blocks opened / instant log full):
     # _tel_open is the hub's block_open dict (first-send detection),
-    # _tel_pkt is the hub itself while per-packet instants are wanted.
+    # _tel_pkt is the hub's raw per-packet instant log while instants are
+    # wanted (the site appends and retracts itself at _tel_pkt_cap).
     # Pre-binding the state into ONE attribute keeps the hot sites at a
     # single load + identity check (see ARCHITECTURE.md §Telemetry).
     _tel_open = None
     _tel_pkt = None
+    _tel_pkt_cap = 0
 
     def __init__(self, sim):
         self.sim = sim
@@ -216,12 +218,21 @@ class AggregationStrategy:
         self._pool = sim.pool
         self._trace = sim.trace
         self._transport = sim.transport
-        tel = sim.telemetry
-        self._telemetry = tel
-        # pre-bound descriptor hooks (None when telemetry is off): saves the
-        # second attribute hop at the per-descriptor call sites
-        self._tel_desc_alloc = None if tel is None else tel.on_desc_alloc
-        self._tel_desc_flush = None if tel is None else tel.on_desc_flush
+        # inlined descriptor telemetry site state (None/0 when telemetry is
+        # off), installed by Telemetry.finalize() — the hub is constructed
+        # after the layers (heap-locality, see Simulator). _tel_sw_hi is the
+        # hub's exact per-switch occupancy high-water list, _tel_desc_log
+        # its raw flush log ((sw, desc, reason, nchildren, t) records up to
+        # _tel_desc_cap entries, then slim (reason, duration) pairs for the
+        # window histogram only), and
+        # _tel_desc_n counts allocs. Inlining keeps the per-descriptor
+        # sites at a few attribute loads instead of a bound-method call;
+        # the hub decodes the log once, lazily, after the run.
+        self._telemetry = None
+        self._tel_sw_hi = None
+        self._tel_desc_log = None
+        self._tel_desc_cap = 0
+        self._tel_desc_n = 0
         self._mtu = cfg.mtu_bytes
         self._retx_timeout = cfg.retx_timeout_ns
         # per-app send constants, built lazily on first pump (after
@@ -400,9 +411,14 @@ class CanaryStrategy(AggregationStrategy):
                 sim.stragglers += 1
                 if trace is not None:
                     trace.on_straggler(sw, in_port, pkt)
-                tel = self._tel_pkt  # hub while the instant log has room
-                if tel is not None:
-                    tel.on_straggler(sw, pkt)
+                ins = self._tel_pkt  # raw instant log while it has room
+                if ins is not None:
+                    # inlined pkt-instant site: raw packed id, decoded at
+                    # consolidation; the site retracts itself when full
+                    ins.append(("straggler", sw, pkt.id, now))
+                    if len(ins) >= self._tel_pkt_cap:
+                        self._tel_pkt = None
+                        self._telemetry.want_pkt_instants = False
                 self._fwd_host(sim, sw, pkt)
             else:
                 desc.value += pkt.value
@@ -434,9 +450,13 @@ class CanaryStrategy(AggregationStrategy):
             sim.collisions += 1
             if trace is not None:
                 trace.on_collision(sw, in_port, pkt)
-            tel = self._tel_pkt  # hub while the instant log has room
-            if tel is not None:
-                tel.on_collision(sw, pkt)
+            ins = self._tel_pkt  # raw instant log while it has room
+            if ins is not None:
+                # inlined pkt-instant site (see the straggler site above)
+                ins.append(("collision", sw, pkt.id, now))
+                if len(ins) >= self._tel_pkt_cap:
+                    self._tel_pkt = None
+                    self._telemetry.want_pkt_instants = False
             pkt.switch_addr = sw
             pkt.port_stamp = in_port
             pkt.bypass = True
@@ -454,9 +474,13 @@ class CanaryStrategy(AggregationStrategy):
             dh[sw] = n
         if trace is not None:
             trace.on_desc_alloc(sw, desc, in_port, pkt)
-        tel_alloc = self._tel_desc_alloc
-        if tel_alloc is not None:
-            tel_alloc(sw, desc, n)
+        hi = self._tel_sw_hi
+        if hi is not None:
+            # inlined on_desc_alloc: occupancy only rises at an alloc, so
+            # the event-driven high-water stays exact at any probe cadence
+            self._tel_desc_n += 1
+            if n > hi[sw]:
+                hi[sw] = n
         if desc.counter >= desc.hosts - 1:
             self._fire_descriptor(sw, desc)
             self._pool.free(pkt)
@@ -492,9 +516,20 @@ class CanaryStrategy(AggregationStrategy):
         out.src = -1
         if self._trace is not None:
             self._trace.on_desc_flush(sw, desc, out, reason)
-        tel_flush = self._tel_desc_flush
-        if tel_flush is not None:
-            tel_flush(sw, desc, reason)
+        dlog = self._tel_desc_log
+        if dlog is not None:
+            # inlined on_desc_flush: raw-log the aggregation window. The
+            # descriptor itself is retained (descriptors are not pooled, so
+            # nothing aliases it later) and the hub reads id/counter/
+            # alloc_ns off it lazily after the run — only the child count
+            # must be captured here, because stragglers keep mutating the
+            # children set after the flush. Past the span cap only
+            # (reason, duration) survives, so retention stays bounded.
+            t = self._engine.now
+            if len(dlog) < self._tel_desc_cap:
+                dlog.append((sw, desc, reason, len(desc.children), t))
+            else:
+                dlog.append((reason, t - desc.alloc_ns))
         self._fwd_host(sim, sw, out)
 
     def on_descriptor_timeout(self, sw: int, desc: Descriptor) -> None:
@@ -572,9 +607,11 @@ class StaticTreeStrategy(AggregationStrategy):
             n = len(table)
             if n > dh[sw]:
                 dh[sw] = n
-            tel_alloc = self._tel_desc_alloc
-            if tel_alloc is not None:
-                tel_alloc(sw, desc, n)
+            hi = self._tel_sw_hi
+            if hi is not None:  # inlined on_desc_alloc (see CanaryStrategy)
+                self._tel_desc_n += 1
+                if n > hi[sw]:
+                    hi[sw] = n
         desc.children.add(in_port)
         desc.value += pkt.value
         desc.counter += pkt.counter
@@ -597,9 +634,13 @@ class StaticTreeStrategy(AggregationStrategy):
             out.src = -1  # switch-originated aggregate (see CanaryStrategy)
             if trace is not None:
                 trace.on_desc_flush(sw, desc, out, "complete")
-            tel_flush = self._tel_desc_flush
-            if tel_flush is not None:
-                tel_flush(sw, desc, "complete")
+            dlog = self._tel_desc_log
+            if dlog is not None:  # inlined on_desc_flush (see CanaryStrategy)
+                if len(dlog) < self._tel_desc_cap:
+                    dlog.append((sw, desc, "complete",
+                                 len(desc.children), now))
+                else:
+                    dlog.append(("complete", now - desc.alloc_ns))
             sim.net.static_send_up(sim, sw, root, out)
             desc.sent = True
         else:
@@ -613,9 +654,13 @@ class StaticTreeStrategy(AggregationStrategy):
             for port in desc.children:
                 out_port_send(sim, sw, port, bc)
             table.pop(pid, None)
-            tel_flush = self._tel_desc_flush
-            if tel_flush is not None:
-                tel_flush(sw, desc, "complete")
+            dlog = self._tel_desc_log
+            if dlog is not None:  # inlined on_desc_flush (see CanaryStrategy)
+                if len(dlog) < self._tel_desc_cap:
+                    dlog.append((sw, desc, "complete",
+                                 len(desc.children), now))
+                else:
+                    dlog.append(("complete", now - desc.alloc_ns))
         self._pool.free(pkt)
 
     def on_switch_bcast(self, sw: int, pkt: Packet) -> None:

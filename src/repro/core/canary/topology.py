@@ -247,6 +247,13 @@ class Topology:
     def all_links(self) -> List[Link]:
         raise NotImplementedError
 
+    def link_names(self) -> List[str]:
+        """Human-readable names for ``all_links()``, index-aligned — the
+        telemetry hotspot report renders these instead of bare indices.
+        Fabrics override with structural names (``leaf3->spine7``); this
+        fallback keeps plug-in topologies working unchanged."""
+        return [f"link/{i}" for i in range(len(self.all_links()))]
+
     def utilizations(self, duration_ns: float) -> List[float]:
         if duration_ns <= 0:
             return [0.0 for _ in self.all_links()]
@@ -615,4 +622,23 @@ class ThreeTierFatTree(Topology):
             out.extend(row)
         for row in self.agg_down:
             out.extend(row)
+        return out
+
+    def link_names(self) -> List[str]:
+        out = [f"host{h}->leaf{self.leaf_of(h)}"
+               for h in range(self.num_hosts)]
+        out += [f"leaf{self.leaf_of(h)}->host{h}"
+                for h in range(self.num_hosts)]
+        for leaf in range(self.L):
+            pod = self.pod_of_leaf(leaf)
+            out += [f"leaf{leaf}->agg{pod * self.A + a}"
+                    for a in range(self.A)]
+        for leaf in range(self.L):
+            pod = self.pod_of_leaf(leaf)
+            out += [f"agg{pod * self.A + a}->leaf{leaf}"
+                    for a in range(self.A)]
+        for g in range(self.num_aggs):
+            out += [f"agg{g}->core{c}" for c in range(self.C)]
+        for g in range(self.num_aggs):
+            out += [f"core{c}->agg{g}" for c in range(self.C)]
         return out

@@ -25,7 +25,7 @@ from ..canary.simulator import Simulator
 from ..canary.types import (Algo, AllreduceJob, SimConfig, SimResult,
                             TenantSpec)
 from .metrics import (JobRecord, job_records, per_tenant_means,
-                      tenant_fairness)
+                      per_tenant_percentiles, percentile, tenant_fairness)
 from .quota import AdmissionController
 
 
@@ -60,11 +60,20 @@ class FleetResult:
     jain_fairness: float               # across tenants (see metrics.py)
     degraded_jobs: int
     deferred_jobs: int
+    # fleet-wide JCT tail (linear-interpolation percentiles over all jobs);
+    # NaN when no job finished. Per-tenant tails live in ``per_tenant``.
+    p50_jct_ns: float = float("nan")
+    p99_jct_ns: float = float("nan")
     per_tenant: Dict[int, dict] = field(default_factory=dict)
     # tenant -> [(t_ns, blocks_in_flight)], present only when the scenario's
     # cfg enabled telemetry (merged from the hub's per-app probe series)
     tenant_series: Dict[int, List[Tuple[float, float]]] = \
         field(default_factory=dict)
+    # full run diagnosis (repro.core.telemetry.attribution.Diagnosis):
+    # per-tenant cause attribution + hotspot ranking, present only when the
+    # scenario's cfg enabled telemetry — a tenant's p99 traced to causes
+    # and to the fabric links responsible (ARCHITECTURE.md §Diagnosis)
+    diagnosis: Optional[object] = None
 
     @property
     def correct(self) -> bool:
@@ -74,7 +83,9 @@ class FleetResult:
         sd = f"{self.mean_slowdown:.2f}" if self.mean_slowdown is not None \
             else "n/a"
         return (f"jobs={len(self.jobs)} correct={self.correct} "
-                f"mean_jct={self.mean_jct_ns/1e3:.1f}us slowdown={sd} "
+                f"mean_jct={self.mean_jct_ns/1e3:.1f}us "
+                f"p50={self.p50_jct_ns/1e3:.1f}us "
+                f"p99={self.p99_jct_ns/1e3:.1f}us slowdown={sd} "
                 f"jain={self.jain_fairness:.3f} degraded={self.degraded_jobs} "
                 f"deferred={self.deferred_jobs}")
 
@@ -129,16 +140,30 @@ class FleetDriver:
         slowdowns = [r.slowdown for r in records if r.slowdown is not None]
         mean_jct_by_tenant = per_tenant_means(records, "jct_ns")
         mean_sd_by_tenant = per_tenant_means(records, "slowdown")
+        jct_pcts = per_tenant_percentiles(records, "jct_ns")
+        sd_pcts = per_tenant_percentiles(records, "slowdown")
         per_tenant: Dict[int, dict] = {}
         for t in sorted({r.tenant for r in records}):
             trs = [r for r in records if r.tenant == t]
+            jp = jct_pcts.get(t, {})
+            sp = sd_pcts.get(t, {})
             per_tenant[t] = {
                 "jobs": len(trs),
                 "mean_jct_ns": mean_jct_by_tenant.get(t, float("nan")),
                 "mean_slowdown": mean_sd_by_tenant.get(t),
+                "p50_jct_ns": jp.get("p50", float("nan")),
+                "p99_jct_ns": jp.get("p99", float("nan")),
+                "p50_slowdown": sp.get("p50"),
+                "p99_slowdown": sp.get("p99"),
                 "degraded_jobs": sum(1 for r in trs if not r.admitted),
                 "fallback_blocks": sum(r.fallback_blocks for r in trs),
             }
+        diag = None
+        if sim.telemetry is not None:
+            # lazy import: the fleet layer only pulls in the diagnosis
+            # machinery when a run actually recorded telemetry
+            from ..telemetry import diagnose, view_of
+            diag = diagnose(view_of(sim.telemetry))
         return FleetResult(
             sim=result,
             jobs=records,
@@ -149,9 +174,12 @@ class FleetDriver:
             jain_fairness=tenant_fairness(records),
             degraded_jobs=sum(1 for r in records if not r.admitted),
             deferred_jobs=len(admission.deferrals) if admission else 0,
+            p50_jct_ns=percentile(jcts, 50.0) if jcts else float("nan"),
+            p99_jct_ns=percentile(jcts, 99.0) if jcts else float("nan"),
             per_tenant=per_tenant,
             tenant_series=(tenant_remaining_series(sim, s.jobs)
                            if sim.telemetry is not None else {}),
+            diagnosis=diag,
         )
 
 

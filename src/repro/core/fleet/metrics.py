@@ -90,6 +90,42 @@ def per_tenant_means(records: Sequence[JobRecord],
     return {t: statistics.mean(vs) for t, vs in by_tenant.items()}
 
 
+def percentile(values: Sequence[float], q: float) -> float:
+    """The ``q``-th percentile (0-100) with linear interpolation between
+    closest ranks — numpy's default method, hand-rolled so the fleet layer
+    stays dependency-free. Raises on an empty sequence."""
+    if not values:
+        raise ValueError("percentile of empty sequence")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
+    vs = sorted(float(v) for v in values)
+    if len(vs) == 1:
+        return vs[0]
+    rank = (q / 100.0) * (len(vs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(vs) - 1)
+    frac = rank - lo
+    return vs[lo] * (1.0 - frac) + vs[hi] * frac
+
+
+def per_tenant_percentiles(records: Sequence[JobRecord],
+                           attr: str = "jct_ns",
+                           qs: Sequence[float] = (50.0, 99.0)
+                           ) -> Dict[int, Dict[str, float]]:
+    """tenant -> {"p50": ..., "p99": ...} over ``attr`` of its jobs — the
+    user-facing latency numbers a serving fleet is judged on (a tenant's
+    p99 JCT is what its own SLO sees; the mean hides the tail). Jobs
+    missing the attr are skipped, tenants with no usable jobs dropped."""
+    by_tenant: Dict[int, List[float]] = {}
+    for r in records:
+        v = getattr(r, attr)
+        if v is None or v != v:
+            continue
+        by_tenant.setdefault(r.tenant, []).append(float(v))
+    return {t: {f"p{q:g}": percentile(vs, q) for q in qs}
+            for t, vs in by_tenant.items()}
+
+
 def tenant_fairness(records: Sequence[JobRecord]) -> float:
     """Jain's index over per-tenant mean slowdowns (falls back to mean JCTs
     when no baselines were run)."""

@@ -11,14 +11,23 @@ bit-identical (probe ticks dispatch outside the pinned ``events`` count).
 The package is jax-free and import-light; ``repro.core.canary`` only
 imports it lazily when a config asks for telemetry.
 """
-from .export import (run_headline_cell, series_rows, to_perfetto,
-                     validate_perfetto, write_perfetto, write_series_csv,
-                     write_series_json)
+from .analysis import (Intervals, RunView, critical_path, hotspots,
+                       load_dump, view_of)
+from .attribution import (CAUSES, CONSERVATION_REL_TOL, Diagnosis,
+                          attribute_app, attribute_block, diagnose)
+from .export import (run_headline_cell, series_rows, to_dump, to_perfetto,
+                     validate_perfetto, write_dump, write_perfetto,
+                     write_series_csv, write_series_json)
 from .hub import Telemetry
 from .metrics import Histogram, MetricsRegistry, TimeSeries
 
 __all__ = [
     "Telemetry", "MetricsRegistry", "Histogram", "TimeSeries",
     "to_perfetto", "write_perfetto", "validate_perfetto", "series_rows",
-    "write_series_csv", "write_series_json", "run_headline_cell",
+    "write_series_csv", "write_series_json", "to_dump", "write_dump",
+    "run_headline_cell",
+    # diagnosis layer (ARCHITECTURE.md §Diagnosis)
+    "Intervals", "RunView", "view_of", "load_dump", "critical_path",
+    "hotspots", "CAUSES", "CONSERVATION_REL_TOL", "Diagnosis",
+    "attribute_block", "attribute_app", "diagnose",
 ]

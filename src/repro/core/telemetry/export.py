@@ -22,7 +22,7 @@ from typing import Dict, Iterator, List, Tuple
 
 __all__ = ["to_perfetto", "write_perfetto", "series_rows",
            "write_series_csv", "write_series_json", "validate_perfetto",
-           "run_headline_cell"]
+           "to_dump", "write_dump", "DUMP_VERSION", "run_headline_cell"]
 
 # synthetic Perfetto processes, one per track kind
 _PIDS = {"app": 1, "sw": 2, "host": 3, "net": 4}
@@ -95,8 +95,9 @@ def to_perfetto(tel) -> Dict[str, object]:
             _instant("block", "app", app, f"leader_done b{block}", t,
                      {"leader": leader})
         elif kind in ("collision", "straggler"):
-            _, sw, block, t = s
-            _instant("switch", "sw", sw, f"{kind} b{block}", t)
+            _, sw, app, block, t = s
+            _instant("switch", "sw", sw, f"{kind} a{app}/b{block}", t,
+                     {"app": app, "block": block})
         elif kind == "drop":
             _, cause, where, t = s
             _instant("drop", "net", 0, f"drop {cause}", t, {"where": where})
@@ -161,6 +162,49 @@ def write_series_json(tel, path: str) -> int:
     return sum(len(s["t_ns"]) for s in doc.values())
 
 
+# --------------------------------------------------------- full-fidelity dump
+DUMP_VERSION = 1
+
+
+def to_dump(tel) -> Dict[str, object]:
+    """Full-fidelity telemetry dump: everything the post-run diagnosis layer
+    (``analysis.load_dump`` / ``scripts/diagnose.py``) needs, as one
+    strict-JSON document — raw span/instant tuples, every probe series,
+    counters, histograms, run metadata and the truncation state that a
+    diagnosis must surface. Unlike :func:`to_perfetto` this is lossless:
+    ``analysis.load_dump(to_dump(tel))`` and ``analysis.view_of(tel)``
+    produce identical views (pinned by ``tests/core/test_diagnosis.py``)."""
+    import dataclasses
+    reg = tel.registry
+    return {
+        "version": DUMP_VERSION,
+        "cfg": dataclasses.asdict(tel.cfg),
+        "meta": getattr(tel, "meta", {}) or {},
+        "summary": tel.summary_dict(),
+        "truncation": tel.truncation_dict(),
+        "spans": [list(s) for s in tel.spans],
+        "instants": [list(s) for s in tel.instants],
+        "open_blocks": [list(b) for b in getattr(tel, "open_blocks", [])],
+        "counters": dict(reg.counters),
+        "series": {name: {"t": list(ts.t), "v": list(ts.v),
+                          # empty series carry +-inf extrema sentinels,
+                          # which strict JSON cannot represent
+                          "hi": ts.hi if ts.t else 0.0,
+                          "lo": ts.lo if ts.t else 0.0,
+                          "dropped": ts.dropped}
+                   for name, ts in sorted(reg.series.items())},
+        "hists": {name: h.to_dict()
+                  for name, h in sorted(reg.hists.items())},
+    }
+
+
+def write_dump(tel, path: str) -> Dict[str, object]:
+    doc = to_dump(tel)
+    with open(path, "w") as f:
+        json.dump(doc, f, allow_nan=False)
+    return doc
+
+
 # ------------------------------------------------------------------ validator
 _PHASES = {"b", "e", "i", "C", "M", "X"}
 
@@ -215,12 +259,15 @@ def validate_perfetto(doc) -> List[str]:
 
 # ------------------------------------------------------------- headline cell
 def run_headline_cell(scale: int = 8, data_bytes: int = 1 << 20,
-                      seed: int = 3, **cfg_overrides):
+                      seed: int = 3, background: bool = True,
+                      **cfg_overrides):
     """Run the headline congested fat-tree cell with telemetry on: half the
     hosts allreduce under CANARY while the other half blasts background
-    congestion traffic, with sender-side noise so descriptor windows
-    actually expire (timeout flushes). Returns the finished ``Simulator``
-    (telemetry hub at ``sim.telemetry``, result at ``sim.telemetry_result``).
+    congestion traffic (disable with ``background=False`` for scenarios
+    that need the injected bottleneck isolated), with sender-side noise so
+    descriptor windows actually expire (timeout flushes). Returns the
+    finished ``Simulator`` (telemetry hub at ``sim.telemetry``, result at
+    ``sim.telemetry_result``).
     """
     from ..canary import Algo, AllreduceJob, Simulator, scaled_config
     base = dict(seed=seed, noise_prob=0.05, telemetry=True)
@@ -229,6 +276,6 @@ def run_headline_cell(scale: int = 8, data_bytes: int = 1 << 20,
     n = cfg.num_hosts
     sim = Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), data_bytes)],
                     algo=Algo.CANARY,
-                    noise_hosts=list(range(n // 2, n)))
+                    noise_hosts=list(range(n // 2, n)) if background else [])
     sim.telemetry_result = sim.run()
     return sim

@@ -92,7 +92,7 @@ class Dcqcn(TransportPolicy):
         self._xoff = float(cfg.pfc_pause_bytes)
         self._xon = float(cfg.pfc_resume_bytes)
         self._cc = [_HostCC(self._line) for _ in range(cfg.num_hosts)]
-        self._telemetry = sim.telemetry  # observation-only; None when off
+        self._telemetry = None  # observation-only; bound in finalize()
         self._last_cnp: Dict[tuple, float] = {}  # (receiver, sender) -> t
         self._cnp_bytes = cfg.header_bytes + 8
         self.ecn_marks = 0
@@ -100,6 +100,10 @@ class Dcqcn(TransportPolicy):
         self.rate_cuts = 0
         self.pfc_pauses = 0
         self.pfc_pause_ns = 0.0
+
+    def finalize(self) -> None:
+        # the telemetry hub is constructed after the transport layer
+        self._telemetry = self.sim.telemetry
 
     # ------------------------------------------------------------ send path
     def before_send(self, host: int, pkt):

@@ -85,7 +85,7 @@ class GoBackN(TransportPolicy):
         self._block_timeout = cfg.retx_timeout_ns
         self._ack_every = cfg.gbn_ack_every
         self._ack_bytes = cfg.header_bytes + 8
-        self._telemetry = sim.telemetry  # observation-only; None when off
+        self._telemetry = None  # observation-only; bound in finalize()
         self._flows: Dict[Tuple[int, int], _PktFlow] = {}
         self._bflows: Dict[Tuple[int, int], _BlockFlow] = {}
         self._expected: Dict[Tuple[int, int], int] = {}  # (host, src) -> seq
@@ -93,6 +93,10 @@ class GoBackN(TransportPolicy):
         self.gbn_retx = 0
         self.gbn_acks = 0
         self.gbn_ooo = 0
+
+    def finalize(self) -> None:
+        # the telemetry hub is constructed after the transport layer
+        self._telemetry = self.sim.telemetry
 
     # ------------------------------------------------------------ send path
     def before_send(self, host: int, pkt):

@@ -1,0 +1,390 @@
+"""Contracts for the diagnosis layer (ARCHITECTURE.md §Diagnosis).
+
+Four layers of guarantees:
+
+* **Conservation** — per-block cause components sum to the measured span
+  within ``CONSERVATION_REL_TOL`` on congested fat_tree and three_tier
+  cells, property-tested across seeds/data sizes, and the per-job critical
+  path partitions the makespan exactly.
+* **Injected bottlenecks name themselves** — each ``scripts/diagnose.py``
+  scenario makes one cause dominant on purpose (hot link, table_size=1
+  collisions, loss under go-back-N, DCQCN pacing) and the diagnosis must
+  rank exactly that cause first.
+* **Offline parity** — ``load_dump(to_dump(tel))`` produces the same
+  diagnosis as the live ``view_of(tel)``; goldens still replay bit-for-bit
+  when a run is diagnosed.
+* **Honesty** — truncated telemetry is surfaced prominently in the report,
+  and ``scripts/check_regressions.py`` gates artifacts against committed
+  baselines with non-zero exit on any breach.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+from golden_cases import CASES, _cfg, _jobs, load_goldens, result_to_jsonable
+
+from repro.core.canary import (Algo, AllreduceJob, Simulator, scaled_config,
+                               three_tier_config)
+from repro.core.telemetry import (CAUSES, CONSERVATION_REL_TOL, Intervals,
+                                  attribute_block, critical_path, diagnose,
+                                  hotspots, load_dump, run_headline_cell,
+                                  to_dump, view_of)
+
+_SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "..", "scripts")
+
+
+def _load_script(name: str):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_SCRIPTS, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _tol(span_ns: float) -> float:
+    return max(1e-3, abs(span_ns) * CONSERVATION_REL_TOL)
+
+
+# --------------------------------------------------------------------------
+# Intervals algebra: the foundation of the conservation argument
+# --------------------------------------------------------------------------
+def test_intervals_normalize_union_intersect_subtract():
+    iv = Intervals([(5.0, 7.0), (0.0, 2.0), (1.0, 3.0), (9.0, 9.0)])
+    assert iv.spans == [(0.0, 3.0), (5.0, 7.0)]
+    assert iv.measure() == 5.0
+    other = Intervals([(2.0, 6.0)])
+    assert iv.union(other).spans == [(0.0, 7.0)]
+    assert iv.intersect(other).spans == [(2.0, 3.0), (5.0, 6.0)]
+    assert iv.subtract(other).spans == [(0.0, 2.0), (6.0, 7.0)]
+    assert iv.clip(1.0, 5.5).spans == [(1.0, 3.0), (5.0, 5.5)]
+    assert Intervals().is_empty()
+
+
+def test_intervals_algebra_properties_random():
+    """Measure-theoretic identities on randomized interval sets: for any
+    A, B drawn inside a window W,
+    |A| = |A∩B| + |A\\B| and |A∪B| = |A| + |B| - |A∩B|."""
+    import random
+    rng = random.Random(1234)
+    for _ in range(200):
+        def rand_set():
+            return Intervals([(a, a + rng.uniform(0.0, 3.0))
+                              for a in (rng.uniform(0.0, 20.0)
+                                        for _ in range(rng.randrange(6)))])
+        a_iv, b_iv = rand_set(), rand_set()
+        inter = a_iv.intersect(b_iv)
+        assert a_iv.measure() == pytest.approx(
+            inter.measure() + a_iv.subtract(b_iv).measure(), abs=1e-9)
+        assert a_iv.union(b_iv).measure() == pytest.approx(
+            a_iv.measure() + b_iv.measure() - inter.measure(), abs=1e-9)
+        # subtraction result is disjoint from the subtrahend
+        assert a_iv.subtract(b_iv).intersect(b_iv).measure() == 0.0
+
+
+# --------------------------------------------------------------------------
+# Conservation: property-tested on congested cells, both fabrics
+# --------------------------------------------------------------------------
+def _congested_cell(topology: str, seed: int, data_bytes: int) -> Simulator:
+    if topology == "fat_tree":
+        cfg = scaled_config(4, seed=seed, noise_prob=0.05, telemetry=True)
+    else:
+        cfg = three_tier_config(num_pods=4, leaves_per_pod=2,
+                                hosts_per_leaf=4, aggs_per_pod=2,
+                                num_cores=4, seed=seed, noise_prob=0.05,
+                                telemetry=True)
+    n = cfg.num_hosts
+    return Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), data_bytes)],
+                     algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+
+
+def _assert_conserved(view) -> int:
+    """Attribute every block; assert the conservation contract on each.
+    Returns the number of blocks checked."""
+    blocks = view.blocks()
+    for blk in blocks:
+        ba = attribute_block(view, blk)
+        ba.check()  # raises on violation
+        assert abs(sum(ba.causes.values()) - ba.span_ns) <= _tol(ba.span_ns)
+        assert set(ba.causes) == set(CAUSES), "closed taxonomy"
+        assert all(v >= 0.0 for v in ba.causes.values())
+    return len(blocks)
+
+
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+@pytest.mark.parametrize("seed,data_bytes",
+                         [(3, 1 << 16), (7, 1 << 17), (13, 49152)])
+def test_conservation_property_on_congested_cells(topology, seed, data_bytes):
+    sim = _congested_cell(topology, seed, data_bytes)
+    res = sim.run()
+    assert res.correct
+    view = view_of(sim.telemetry)
+    assert _assert_conserved(view) > 0
+
+
+@pytest.mark.parametrize("topology", ["fat_tree", "three_tier"])
+def test_critical_path_partitions_makespan_exactly(topology):
+    """Job-level half of the contract: path segments tile the makespan."""
+    sim = _congested_cell(topology, seed=3, data_bytes=1 << 16)
+    sim.run()
+    view = view_of(sim.telemetry)
+    for app in view.apps():
+        path = critical_path(view, app)
+        blocks = [b for b in view.blocks() if b.app == app]
+        makespan = max(b.t1 for b in blocks) - min(b.t0 for b in blocks)
+        assert sum(s.span_ns for s in path) == pytest.approx(
+            makespan, rel=1e-9)
+        # segments are contiguous and ordered
+        for prev, nxt in zip(path, path[1:]):
+            assert nxt.t0 == pytest.approx(prev.t1, abs=1e-6)
+
+
+def test_diagnose_runs_conservation_check_on_every_block():
+    sim = _congested_cell("fat_tree", seed=3, data_bytes=1 << 16)
+    sim.run()
+    diag = diagnose(view_of(sim.telemetry))  # check() raises inside on breach
+    assert diag.per_block
+    assert sum(diag.totals.values()) > 0.0
+    # per-app totals equal the sum of that app's path-scaled causes
+    for app, aa in diag.per_app.items():
+        assert sum(aa.causes.values()) == pytest.approx(aa.makespan_ns,
+                                                        rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Injected bottlenecks: the diagnosis must name the cause we injected
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def diagnose_script():
+    return _load_script("diagnose")
+
+
+@pytest.mark.parametrize("scenario",
+                         ["hot_link", "collisions", "loss_gbn", "dcqcn"])
+def test_injected_bottleneck_is_top_cause(scenario, diagnose_script):
+    expected = diagnose_script.SCENARIOS[scenario]["expect"]
+    sim = diagnose_script.run_scenario(scenario, scale=4,
+                                       data_bytes=1 << 18, seed=3)
+    assert sim.telemetry_result.correct
+    diag = diagnose(view_of(sim.telemetry))
+    assert diag.top_cause() == expected, \
+        f"{scenario}: expected {expected}, ranked {diag.ranked()[:3]}"
+
+
+def test_diagnose_cli_expect_top_exits_nonzero_on_mismatch(diagnose_script,
+                                                           tmp_path):
+    out = tmp_path / "report.json"
+    argv = ["--scenario", "hot_link", "--scale", "4",
+            "--data-bytes", str(1 << 18), "--json", str(out)]
+    diagnose_script.main(argv)  # default expectation: the injected cause
+    doc = json.loads(out.read_text())
+    assert doc["top_cause"] == "queueing"
+    assert [r["cause"] for r in doc["ranked"]][0] == "queueing"
+    with pytest.raises(SystemExit):
+        diagnose_script.main(argv + ["--expect-top", "pfc_pause"])
+
+
+# --------------------------------------------------------------------------
+# Offline parity: dump round trip + hotspots
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def headline_sim():
+    return run_headline_cell(scale=4, data_bytes=1 << 17)
+
+
+def test_dump_round_trip_preserves_diagnosis(headline_sim, tmp_path):
+    tel = headline_sim.telemetry
+    doc = json.loads(json.dumps(to_dump(tel), allow_nan=False))
+    live = diagnose(view_of(tel))
+    offline = diagnose(load_dump(doc))
+    assert offline.totals == live.totals
+    assert offline.top_cause() == live.top_cause()
+    assert [h.to_dict() for h in offline.hotspots] == \
+        [h.to_dict() for h in live.hotspots]
+    assert offline.to_json() == live.to_json()
+    # and via the file-writing path
+    from repro.core.telemetry import write_dump
+    p = tmp_path / "dump.json"
+    write_dump(tel, str(p))
+    assert diagnose(load_dump(str(p))).totals == live.totals
+
+
+def test_load_dump_rejects_unknown_version():
+    with pytest.raises(ValueError):
+        load_dump({"version": 99})
+
+
+def test_hotspots_ranked_with_structural_names(headline_sim):
+    view = view_of(headline_sim.telemetry)
+    hs = hotspots(view, top=5)
+    assert hs and len(hs) <= 5
+    assert hs[0].mean_queue_ns >= hs[-1].mean_queue_ns
+    # fat-tree structural names, not the generic fallback
+    assert all("->" in h.name for h in hs)
+    assert all(0.0 <= h.busy_frac <= 1.0 for h in hs)
+
+
+def test_tenant_windows_split_hotspot_attribution():
+    """Two tenants running in disjoint time windows: each tenant's hotspot
+    ranking must only see queueing from its own window."""
+    cfg = scaled_config(4, seed=5, telemetry=True)
+    jobs = [AllreduceJob(app=0, participants=[0, 1, 2, 3],
+                         data_bytes=1 << 16, tenant=0),
+            AllreduceJob(app=1, participants=[8, 9, 10, 11],
+                         data_bytes=1 << 16, tenant=1,
+                         arrival_ns=100_000.0)]
+    sim = Simulator(cfg, jobs, algo=Algo.CANARY)
+    res = sim.run()
+    assert res.correct
+    diag = diagnose(view_of(sim.telemetry))
+    assert set(diag.per_tenant) == {0, 1}
+    assert set(diag.tenant_hotspots) == {0, 1}
+    h0 = {h.link for h in diag.tenant_hotspots[0]}
+    h1 = {h.link for h in diag.tenant_hotspots[1]}
+    # disjoint participants on disjoint leaves at disjoint times: the two
+    # tenants' host-link hotspots cannot coincide
+    n = cfg.num_hosts
+    assert not ({l for l in h0 if l < 2 * n} & {l for l in h1 if l < 2 * n})
+
+
+# --------------------------------------------------------------------------
+# Goldens replay bit-for-bit when a run is diagnosed
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_goldens_replay_with_diagnosis_enabled(name, goldens):
+    cfg_kw, jobs_spec, algo, n_trees, noise = CASES[name]
+    sim = Simulator(_cfg(**{**cfg_kw, "telemetry": True}), _jobs(jobs_spec),
+                    algo=algo, n_trees=n_trees, noise_hosts=noise)
+    assert result_to_jsonable(sim.run()) == goldens[name], \
+        f"golden {name!r} diverged with telemetry enabled"
+    diag = diagnose(view_of(sim.telemetry))  # conservation-checked inside
+    assert diag.top_cause() in CAUSES
+
+
+# --------------------------------------------------------------------------
+# Honesty: truncation surfaces prominently
+# --------------------------------------------------------------------------
+def test_truncated_telemetry_is_banner_surfaced():
+    cfg = scaled_config(4, seed=3, noise_prob=0.05, telemetry=True,
+                        telemetry_max_spans=50)
+    n = cfg.num_hosts
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(n // 2)), 1 << 17)],
+                    algo=Algo.CANARY, noise_hosts=list(range(n // 2, n)))
+    sim.run()
+    tel = sim.telemetry
+    assert tel.spans_dropped > 0
+    view = view_of(tel)
+    assert view.truncated
+    diag = diagnose(view)
+    assert diag.truncated
+    text = diag.to_text()
+    assert "TELEMETRY TRUNCATED" in text
+    assert "LOWER BOUND" in text
+    assert diag.to_json()["truncated"] is True
+    # the truncation counters round-trip through the dump exporter
+    doc = to_dump(tel)
+    assert doc["truncation"]["spans_dropped"] == tel.spans_dropped
+    assert load_dump(json.loads(json.dumps(doc))).truncated
+
+
+def test_untruncated_run_has_no_banner(headline_sim):
+    diag = diagnose(view_of(headline_sim.telemetry))
+    assert not diag.truncated
+    assert "TELEMETRY TRUNCATED" not in diag.to_text()
+
+
+def test_spans_off_diagnosis_degrades_with_notes():
+    cfg = scaled_config(4, seed=3, telemetry=True, telemetry_spans=False)
+    sim = Simulator(cfg, [AllreduceJob(0, list(range(8)), 1 << 14)],
+                    algo=Algo.CANARY)
+    sim.run()
+    diag = diagnose(view_of(sim.telemetry))
+    assert diag.per_block == [] and diag.per_app == {}
+    assert any("no block spans" in n for n in diag.notes)
+    assert "note:" in diag.to_text()
+
+
+# --------------------------------------------------------------------------
+# Regression gate: scripts/check_regressions.py
+# --------------------------------------------------------------------------
+@pytest.fixture()
+def gate(tmp_path):
+    mod = _load_script("check_regressions")
+
+    def run(baselines: dict, artifacts: dict, extra_argv=()):
+        bpath = tmp_path / "baselines.json"
+        bpath.write_text(json.dumps(baselines))
+        for name, doc in artifacts.items():
+            (tmp_path / name).write_text(json.dumps(doc))
+        mod.main(["--baselines", str(bpath), "--dir", str(tmp_path),
+                  *extra_argv])
+    return run
+
+
+def test_gate_passes_within_bounds(gate):
+    gate({"files": {"R.json": {"any": {
+            "cells.a.speedup": {"min": 1.2},
+            "cells.a.events": {"ref": 100, "rel_tol": 0},
+            "failed": {"empty": True},
+            "ok": {"equals": True}}}}},
+         {"R.json": {"cells": {"a": {"speedup": 1.5, "events": 100}},
+                     "failed": [], "ok": True}})
+
+
+@pytest.mark.parametrize("artifact", [
+    {"cells": {"a": {"speedup": 1.1, "events": 100}},
+     "failed": [], "ok": True},              # speedup below floor
+    {"cells": {"a": {"speedup": 1.5, "events": 101}},
+     "failed": [], "ok": True},              # event count drifted (rel_tol 0)
+    {"cells": {"a": {"speedup": 1.5, "events": 100}},
+     "failed": ["fig7"], "ok": True},        # failed suite recorded
+    {"cells": {"a": {"speedup": 1.5}},
+     "failed": [], "ok": True},              # path missing from artifact
+], ids=["below-min", "ref-drift", "non-empty", "missing-path"])
+def test_gate_exits_nonzero_on_breach(gate, artifact):
+    with pytest.raises(SystemExit):
+        gate({"files": {"R.json": {"any": {
+                "cells.a.speedup": {"min": 1.2},
+                "cells.a.events": {"ref": 100, "rel_tol": 0},
+                "failed": {"empty": True},
+                "ok": {"equals": True}}}}},
+             {"R.json": artifact})
+
+
+def test_gate_profile_key_selects_fast_or_full(gate):
+    base = {"files": {"R.json": {
+        "profile_key": "fast",
+        "fast": {"n": {"ref": 10, "rel_tol": 0}},
+        "full": {"n": {"ref": 20, "rel_tol": 0}}}}}
+    gate(base, {"R.json": {"fast": True, "n": 10}})
+    gate(base, {"R.json": {"fast": False, "n": 20}})
+    with pytest.raises(SystemExit):
+        gate(base, {"R.json": {"fast": True, "n": 20}})
+
+
+def test_gate_missing_artifact_skips_unless_required(gate):
+    base = {"files": {"ABSENT.json": {"any": {"x": {"min": 1}}}}}
+    gate(base, {})  # skip, no error
+    with pytest.raises(SystemExit):
+        gate(base, {}, extra_argv=["--require-all"])
+
+
+def test_committed_baselines_parse_and_gate_runs():
+    """The checked-in baseline file is well-formed: every constraint object
+    uses only known keys and the gate accepts it end to end."""
+    path = os.path.join(_SCRIPTS, "..", "benchmarks",
+                        "regression_baselines.json")
+    with open(path) as f:
+        base = json.load(f)
+    known = {"min", "max", "ref", "rel_tol", "equals", "empty", "reason"}
+    for rules in base["files"].values():
+        for profile in ("any", "fast", "full"):
+            for dotted, spec in rules.get(profile, {}).items():
+                assert set(spec) <= known, (dotted, spec)
+                assert set(spec) - {"reason"}, f"no-op constraint: {dotted}"

@@ -193,6 +193,44 @@ def test_validator_rejects_malformed_documents():
     assert any("unbalanced" in e for e in validate_perfetto(bad))
 
 
+def test_exporters_handle_zero_spans_and_zero_probes(tmp_path):
+    """Edge case: a hub with spans and probes both gated off still exports
+    a schema-valid Perfetto document, a header-only CSV and a loadable
+    dump (ISSUE satellite: exporter edge cases)."""
+    from repro.core.telemetry import (load_dump, to_dump, write_series_csv,
+                                      write_series_json)
+    sim = _build("canary_basic", telemetry=True, telemetry_spans=False,
+                 telemetry_probes=False)
+    sim.run()
+    tel = sim.telemetry
+    assert tel.spans == [] and tel.instants == []
+    doc = to_perfetto(tel)
+    assert validate_perfetto(doc) == []
+    csv_path = tmp_path / "empty.csv"
+    assert write_series_csv(tel, str(csv_path)) == 0
+    assert csv_path.read_text().splitlines() == ["series,t_ns,value"]
+    assert write_series_json(tel, str(tmp_path / "empty.json")) == 0
+    # the dump is strict JSON (no NaN/inf extrema sentinels) and loads back
+    dump = json.loads(json.dumps(to_dump(tel), allow_nan=False))
+    view = load_dump(dump)
+    assert view.blocks() == [] and not view.truncated
+
+
+def test_truncation_counters_round_trip_through_exports():
+    """Span-cap truncation must be visible in every export format, not
+    silently absorbed (ISSUE satellite: truncation round-trip)."""
+    from repro.core.telemetry import load_dump, to_dump
+    sim = _build("canary_congestion_noise", telemetry=True,
+                 telemetry_max_spans=10)
+    sim.run()
+    tel = sim.telemetry
+    assert tel.spans_dropped > 0
+    assert to_perfetto(tel)["otherData"]["spans_dropped"] == tel.spans_dropped
+    dump = to_dump(tel)
+    assert dump["truncation"]["spans_dropped"] == tel.spans_dropped
+    assert load_dump(json.loads(json.dumps(dump))).truncated
+
+
 def test_series_dumps_round_trip(headline_sim, tmp_path):
     from repro.core.telemetry import write_series_csv, write_series_json
     tel = headline_sim.telemetry

@@ -232,6 +232,88 @@ def test_fleet_on_three_tier_topology():
 
 
 # ---------------------------------------------------------------- metrics
+def test_percentile_linear_interpolation_pinned():
+    """Pins the numpy-default linear-interpolation method (ISSUE satellite:
+    per-tenant p50/p99)."""
+    from repro.core.fleet.metrics import percentile
+    assert percentile([5.0], 99.0) == 5.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50.0) == pytest.approx(2.5)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.0) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100.0) == 4.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 25.0) == pytest.approx(1.75)
+    # p99 of 1..100 lands between the 99th and 100th order statistic
+    assert percentile([float(i) for i in range(1, 101)], 99.0) == \
+        pytest.approx(99.01)
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], 150.0)
+
+
+def test_per_tenant_percentiles_skip_unusable_jobs():
+    from repro.core.fleet.metrics import JobRecord, per_tenant_percentiles
+    recs = [JobRecord(app=a, tenant=a % 2, submit_ns=0.0, start_ns=0.0,
+                      finish_ns=float(a), jct_ns=float(a + 1),
+                      admitted=True, fallback_blocks=0)
+            for a in range(6)]
+    recs.append(JobRecord(app=9, tenant=0, submit_ns=0.0, start_ns=0.0,
+                          finish_ns=float("nan"), jct_ns=float("nan"),
+                          admitted=True, fallback_blocks=0))
+    pct = per_tenant_percentiles(recs, "jct_ns")
+    assert set(pct) == {0, 1}
+    assert pct[0]["p50"] == pytest.approx(3.0)   # jcts 1, 3, 5 (NaN skipped)
+    assert pct[1]["p50"] == pytest.approx(4.0)   # jcts 2, 4, 6
+    assert pct[0]["p99"] <= 5.0 and pct[1]["p99"] <= 6.0
+    # no baselines -> no slowdowns -> empty mapping, not a crash
+    assert per_tenant_percentiles(recs, "slowdown") == {}
+
+
+def test_fleet_result_surfaces_jct_percentiles():
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0, weight=2.0), TenantSpec(1, weight=1.0)]
+    rng = random.Random(3)
+    jobs = make_jobs(tenants[0], [0.0, 2000.0, 4000.0], range(8), 4, 16384,
+                     rng=rng, app_base=0) + \
+        make_jobs(tenants[1], [1000.0], range(8, 16), 4, 16384,
+                  rng=rng, app_base=10)
+    fr = run_fleet(FleetScenario(cfg=cfg, tenants=tenants, jobs=jobs,
+                                 quota_policy="weighted"))
+    assert fr.correct
+    jcts = sorted(r.jct_ns for r in fr.jobs)
+    assert jcts[0] <= fr.p50_jct_ns <= fr.p99_jct_ns <= fr.max_jct_ns
+    s = fr.summary()
+    assert f"p50={fr.p50_jct_ns/1e3:.1f}us" in s
+    assert f"p99={fr.p99_jct_ns/1e3:.1f}us" in s
+    for t, d in fr.per_tenant.items():
+        assert d["p50_jct_ns"] <= d["p99_jct_ns"]
+        assert d["p50_slowdown"] is not None    # baselines were on
+        assert d["p50_slowdown"] <= d["p99_slowdown"]
+    # single-job tenant: every percentile is that one job's value
+    solo = [r for r in fr.jobs if r.tenant == 1]
+    assert len(solo) == 1
+    assert fr.per_tenant[1]["p50_jct_ns"] == solo[0].jct_ns
+    assert fr.per_tenant[1]["p99_jct_ns"] == solo[0].jct_ns
+
+
+def test_fleet_diagnosis_attached_only_with_telemetry():
+    cfg = tiny_cfg()
+    tenants = [TenantSpec(0), TenantSpec(1)]
+    jobs = [AllreduceJob(0, [0, 1, 2, 3], 16384, tenant=0),
+            AllreduceJob(1, [8, 9, 10, 11], 16384, tenant=1,
+                         arrival_ns=2000.0)]
+    off = run_fleet(FleetScenario(cfg=cfg, tenants=tenants, jobs=jobs,
+                                  quota_policy="none", baselines=False))
+    assert off.diagnosis is None
+    on = run_fleet(FleetScenario(cfg=tiny_cfg(telemetry=True),
+                                 tenants=tenants, jobs=jobs,
+                                 quota_policy="none", baselines=False))
+    assert on.diagnosis is not None
+    assert set(on.diagnosis.per_tenant) == {0, 1}
+    assert sum(on.diagnosis.totals.values()) > 0.0
+    # the report renders the per-tenant section for a multi-tenant run
+    assert "per-tenant attribution:" in on.diagnosis.to_text()
+
+
 def test_jain_index_bounds():
     assert jain_index([]) == 1.0
     assert jain_index([3.0, 3.0, 3.0]) == pytest.approx(1.0)
