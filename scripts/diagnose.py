@@ -15,7 +15,8 @@ Usage::
 Prints the human "why was this slow" report (ARCHITECTURE.md §Diagnosis):
 per-cause share of the critical path under the closed taxonomy
 (wire / queueing / timeout_flush / collision_bypass / retx_recovery /
-dcqcn_pacing / pfc_pause / bcast_tail / other, conservation property-tested),
+dcqcn_pacing / pfc_pause / bcast_tail / fault_recovery / other,
+conservation property-tested),
 the top congestion hotspots by mean queueing delay, and per-app/per-tenant
 breakdowns. ``--json`` additionally writes the full machine report.
 
@@ -30,6 +31,8 @@ the injected-bottleneck scenarios below use it as their acceptance check:
 * ``loss_gbn``    — lossy wire under go-back-N (expected: ``retx_recovery``)
 * ``dcqcn``       — aggressive ECN marking + slow rate recovery (expected:
   ``dcqcn_pacing``)
+* ``fault``       — mid-run spine crash + recovery under go-back-N
+  (expected: ``fault_recovery``)
 """
 from __future__ import annotations
 
@@ -70,15 +73,29 @@ SCENARIOS = {
                             "ecn_kmin_bytes": 4096,
                             "ecn_kmax_bytes": 16384,
                             "ecn_pmax": 1.0}},
+    # mid-run spine crash + recovery (repro.core.faults): blocks in flight
+    # stall on the dead switch until the heal, so the fault window dominates
+    # the critical path. The crashed spine is chosen per scale in
+    # run_scenario (the middle spine, gid scale + scale//2).
+    "fault": {"expect": "fault_recovery",
+              "overrides": {"transport": "gbn", "retx_timeout_ns": 5e4,
+                            "noise_prob": 0.0}},
 }
 
 
 def run_scenario(name: str, scale: int, data_bytes: int, seed: int):
     from repro.core.telemetry import run_headline_cell
     spec = SCENARIOS[name]
+    overrides = dict(spec["overrides"])
+    if name == "fault":
+        # the spine gid depends on the fabric scale, so the schedule cannot
+        # be a static override: crash the middle spine mid-run, heal late
+        overrides["faults"] = [{"kind": "switch_crash",
+                                "target": scale + scale // 2,
+                                "at_ns": 5000.0, "heal_ns": 45000.0}]
     return run_headline_cell(scale=scale, data_bytes=data_bytes, seed=seed,
                              background=spec.get("background", True),
-                             **spec["overrides"])
+                             **overrides)
 
 
 def main(argv=None) -> None:

@@ -63,7 +63,15 @@ EV_LINK_ARRIVE_HOST = 13    # a=host, c=Link
 # pure observation, so telemetry-on runs report the identical dispatch count
 # as telemetry-off runs. Never pushed unless telemetry is enabled.
 EV_TELEMETRY_PROBE = 14     # c=Telemetry hub (re-arms itself)
-N_EVENT_KINDS = 15
+# Fault-injection events (repro.core.faults): scheduled mid-run failures and
+# recoveries. Dispatched by the loop's third branch WITHOUT incrementing the
+# ``events`` counter — like telemetry probes they are orchestration, not
+# protocol traffic, and the counter is a golden-pinned field. Never pushed
+# unless ``SimConfig.faults`` is non-empty, so fault-free runs (including
+# every golden) see the identical dispatch stream.
+EV_FAULT = 15               # a=fault index, c=FaultSchedule
+EV_HEAL = 16                # a=fault index, c=FaultSchedule
+N_EVENT_KINDS = 17
 
 Handler = Callable[[int, int, object], None]
 
@@ -148,10 +156,16 @@ class EventLoop:
                     if q:
                         head = q[0]
                         _heappush(heap, (head[0], head[1], kind, a, b, c))
-                    handlers[kind](a, b, entry[2])
+                    p = entry[2]
+                    # ``None`` marks a head neutralized by a link-down fault
+                    # drain (repro.core.faults): the slot stays in the deque
+                    # because it owns this heap entry, but carries no packet.
+                    if p is not None:
+                        handlers[kind](a, b, p)
                 else:
-                    # EV_TELEMETRY_PROBE: observation-only sample, excluded
-                    # from the golden ``events`` count and the livelock budget
+                    # EV_TELEMETRY_PROBE / EV_FAULT / EV_HEAL: observation
+                    # and orchestration, excluded from the golden ``events``
+                    # count and the livelock budget
                     handlers[kind](a, b, c)
         finally:
             self.events = events

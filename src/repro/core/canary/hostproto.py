@@ -117,6 +117,11 @@ class HostProtocol:
         self._tel_left = None
         self._fail_resend_bypass = False
         self._gbn = False  # transport owns block retx (go-back-N recovery)
+        # fault-injection state (repro.core.faults): the schedule object
+        # (None without one — every hook is one identity check) and the
+        # live paused-host set a host_slow fault installs
+        self._faults = None
+        self._fault_paused = None
 
     def finalize(self) -> None:
         """Pre-resolve the strategy/workload callables (both layers are
@@ -131,6 +136,7 @@ class HostProtocol:
         self._fail_resend_bypass = sim.strategy.fail_resend_bypass
         self._gbn = self._transport is not None \
             and self._transport.owns_block_retx
+        self._faults = getattr(sim, "faults", None)
 
     # ------------------------------------------------------------ send pump
     def schedule_pump(self, host: int, t: float) -> None:
@@ -145,6 +151,11 @@ class HostProtocol:
         hs.pump_scheduled = False
         sim = self.sim
         if self._engine.stop:  # == sim.all_done(): set in job_finished
+            return
+        fp = self._fault_paused
+        if fp is not None and host in fp:
+            # host_slow fault (repro.core.faults): the straggler's pump is
+            # parked; the heal re-pumps every paused host
             return
         pkt = hs.pending
         if pkt is None:
@@ -390,6 +401,14 @@ class HostProtocol:
                 # admission-degraded apps were counted whole at activation
                 sim.app_fallback_blocks[app] = \
                     sim.app_fallback_blocks.get(app, 0) + 1
+                fa = self._faults
+                if fa is not None and fa.any_active():
+                    # generation cap hit while a fault is live: the fabric
+                    # path is (probably) the casualty — escalate the whole
+                    # app to the §3.3 host-based fallback rather than let
+                    # later blocks spin through the cap too (the documented
+                    # agg-switch livelock)
+                    fa.escalate_app(app)
         # Generation ids saturate at _MAX_GEN. Under go-back-N the saturated
         # rounds keep ONE accumulating partial (src-deduped above) instead of
         # restarting — each host's resend then only has to get through once
@@ -441,7 +460,11 @@ class HostProtocol:
         # the leader's (never resent) leaf contribution. Under a transport
         # that owns block recovery, resends bypass the fabric aggregation
         # and sum at the leader host instead.
-        bypass = fallback or (gbn and self._fail_resend_bypass)
+        # fail_resend_bypass generalizes to mid-run deaths: with a fault
+        # schedule present, a resent cohort routed through the plan could be
+        # waiting on a switch whose descriptors a crash just flushed
+        bypass = fallback or (self._fail_resend_bypass
+                              and (gbn or self._faults is not None))
         rp = Packet(kind=PacketKind.REDUCE, dest=sim.leader_of(app, block),
                     id=make_id(app, block, gen), counter=1,
                     hosts=len(sim.leaders[app]),

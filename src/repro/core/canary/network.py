@@ -29,7 +29,8 @@ from heapq import heappush as _heappush
 from typing import Dict, List, Optional
 
 from .engine import EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH
-from .topology import Link, Topology, pick_min_backlog, register_topology
+from .topology import (LINK_DOWN_HORIZON, Link, Topology, pick_min_backlog,
+                       register_topology)
 from .types import Packet, PacketKind, SimConfig
 
 __all__ = ["FatTree", "Link"]
@@ -156,6 +157,9 @@ class FatTree(Topology):
         eng = self._engine
         now = eng.now
         bu = link.busy_until
+        if bu >= LINK_DOWN_HORIZON:  # poisoned by a fault (topology.py)
+            sim.faults.on_tx_down(link, pkt, self._host_leaf[host])
+            return now + pkt.size_bytes / link.bytes_per_ns
         start = bu if bu > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
@@ -199,6 +203,9 @@ class FatTree(Topology):
             link = self.leaf_down[dleaf][sw - self.L]
             now = eng.now
             bu = link.busy_until
+            if bu >= LINK_DOWN_HORIZON:
+                sim.faults.on_tx_down(link, pkt, dleaf)
+                return
             start = bu if bu > now else now
             link.busy_until = busy = start + size / link.bytes_per_ns
             link.bytes_sent += size
@@ -222,6 +229,9 @@ class FatTree(Topology):
             link = self.host_down[dest]
             now = eng.now
             bu = link.busy_until
+            if bu >= LINK_DOWN_HORIZON:
+                sim.faults.on_tx_down(link, pkt, dest)
+                return
             start = bu if bu > now else now
             link.busy_until = busy = start + size / link.bytes_per_ns
             link.bytes_sent += size
@@ -267,7 +277,10 @@ class FatTree(Topology):
             key = (sw, kind, pkt.src, dest,
                    pkt.chunk if kind == _K_NOISE else pkt.step)
             spine = self.flowlets.get(key)
-            if spine is None:
+            if spine is None or \
+                    self.leaf_up[sw][spine].busy_until >= LINK_DOWN_HORIZON:
+                # no commitment yet, or the committed spine died mid-run:
+                # (re-)pick and (re-)pin
                 remote = self.leaf_down[dleaf] \
                     if self._path_aware and dleaf >= 0 else None
                 spine = pick_min_backlog(self.leaf_up[sw], fh % self.S,
@@ -275,6 +288,11 @@ class FatTree(Topology):
                 self.flowlets[key] = spine
         elif code == 0:  # ecmp: the hash default, no metric
             spine = fh % self.S
+            if self.leaf_up[sw][spine].busy_until >= LINK_DOWN_HORIZON:
+                # dead ECMP member: the backlog scan sees the poisoned link
+                # as infinite backlog and routes around it
+                spine = pick_min_backlog(self.leaf_up[sw], spine, eng.now,
+                                         policy, self._thr, None)
         else:
             # inline the pick_min_backlog fast path: adaptive stays on the
             # default while its (per-leg clamped) path backlog is under the
@@ -303,6 +321,11 @@ class FatTree(Topology):
         link = self.leaf_up[sw][spine]
         now = eng.now
         bu = link.busy_until
+        if bu >= LINK_DOWN_HORIZON:
+            # every LB path above avoids dead members where an alternative
+            # exists; reaching here means the whole group is down
+            sim.faults.on_tx_down(link, pkt, self.L + spine)
+            return
         start = bu if bu > now else now
         link.busy_until = busy = start + size / link.bytes_per_ns
         link.bytes_sent += size
@@ -359,6 +382,9 @@ class FatTree(Topology):
         now = eng.now
         bu = link.busy_until
         size = pkt.size_bytes
+        if bu >= LINK_DOWN_HORIZON:
+            sim.faults.on_tx_down(link, pkt, a)
+            return
         start = bu if bu > now else now
         link.busy_until = busy = start + size / link.bytes_per_ns
         link.bytes_sent += size
@@ -391,6 +417,15 @@ class FatTree(Topology):
 
     def static_send_up(self, sim, sw: int, root: int, pkt: Packet) -> None:
         self._send_leaf_up(sim, sw, self.spine_index(root), pkt)
+
+    # ---- fault-injection support --------------------------------------------
+    def links_into(self, sw: int) -> List[Link]:
+        if sw < self.L:
+            return ([self.host_up[h]
+                     for h in range(sw * self.H, (sw + 1) * self.H)]
+                    + [self.leaf_down[sw][s] for s in range(self.S)])
+        s = sw - self.L
+        return [self.leaf_up[leaf][s] for leaf in range(self.L)]
 
     # ---- utilization accounting ---------------------------------------------
     def all_links(self) -> List[Link]:

@@ -33,10 +33,11 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from . import network as _network  # noqa: F401  (registers "fat_tree")
 from .engine import (EV_ARRIVE_HOST, EV_ARRIVE_SWITCH, EV_FAIL_SWITCH,
-                     EV_GBN_TIMER, EV_JOB_ARRIVE, EV_LEADER_DONE,
-                     EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH, EV_PFC_PAUSE,
-                     EV_PFC_RESUME, EV_PUMP, EV_RATE_TIMER, EV_RETX,
-                     EV_TELEMETRY_PROBE, EV_TIMER, EventLoop, N_EVENT_KINDS)
+                     EV_FAULT, EV_GBN_TIMER, EV_HEAL, EV_JOB_ARRIVE,
+                     EV_LEADER_DONE, EV_LINK_ARRIVE_HOST,
+                     EV_LINK_ARRIVE_SWITCH, EV_PFC_PAUSE, EV_PFC_RESUME,
+                     EV_PUMP, EV_RATE_TIMER, EV_RETX, EV_TELEMETRY_PROBE,
+                     EV_TIMER, EventLoop, N_EVENT_KINDS)
 from .hostproto import HostProtocol
 from .switch import SwitchLayer, make_strategy
 from .topology import make_topology
@@ -110,6 +111,15 @@ class Simulator:
         if cfg.telemetry:
             from ..telemetry.hub import Telemetry  # deferred: optional
             self.telemetry = Telemetry(self)
+        # opt-in fault injection (repro.core.faults): same deal — ``None``
+        # without a schedule, so the hot-layer hooks stay one identity check
+        # (or one float compare against the link poison horizon) and
+        # fault-free runs replay the goldens bit-for-bit. Built before the
+        # finalize pass so hostproto can bind it.
+        self.faults = None
+        if cfg.faults:
+            from ..faults import FaultSchedule  # deferred: optional
+            self.faults = FaultSchedule(self)
         # finalize: every layer pre-resolves its per-packet callables now
         # that the full layer graph exists (ARCHITECTURE.md §Performance)
         self.switch.finalize()
@@ -166,6 +176,8 @@ class Simulator:
         self._et_base: Dict[int, int] = {}             # expected_total =
         self._et_slope: Dict[int, int] = {}            #   base + slope * block
         self._setup_jobs()
+        if self.faults is not None:
+            self.faults.start()
 
     # ------------------------------------------------------------------ setup
     def _setup_jobs(self) -> None:
@@ -350,6 +362,10 @@ class Simulator:
         if tel is not None:
             handlers[EV_TELEMETRY_PROBE] = tel.handle_probe
             tel.start()  # arm the self-re-arming probe chain
+        fa = self.faults
+        if fa is not None:
+            handlers[EV_FAULT] = fa.handle_fault
+            handlers[EV_HEAL] = fa.handle_heal
         # the event loop allocates millions of short-lived tuples/packets and
         # creates no reference cycles; pausing the cyclic GC for the drain is
         # worth ~10-15% wall time (state restored on every exit path)
@@ -382,8 +398,18 @@ class Simulator:
         # fields: the golden contract pins only the pre-existing ones)
         tele = self.transport.telemetry() if self.transport is not None else {}
         host_rates = tele.pop("host_rate_gbps", {})
-        drop_causes = {"wire": self.dropped - self.dropped_failed,
-                       "switch_fail": self.dropped_failed}
+        fault_dropped = sum(fa.drop_counts.values()) if fa is not None else 0
+        drop_causes = {
+            "wire": self.dropped - self.dropped_failed - fault_dropped,
+            "switch_fail": self.dropped_failed}
+        if fa is not None:
+            # fault drops merge by cause ("switch_fail" folds into the
+            # failed-switch sink; "link_down" is its own bucket)
+            for cause, n in fa.drop_counts.items():
+                drop_causes[cause] = drop_causes.get(cause, 0) + n
+            fault_exposure, fault_recovery, survived = fa.finish()
+        else:
+            fault_exposure = fault_recovery = survived = {}
         if "gbn_ooo" in tele:
             drop_causes["gbn_ooo_discard"] = tele["gbn_ooo"]
         return SimResult(
@@ -414,4 +440,8 @@ class Simulator:
             transport_stats=tele,
             host_rate_gbps=host_rates,
             telemetry_summary=(tel.summary_dict() if tel is not None else {}),
+            fault_events=(list(fa.events) if fa is not None else []),
+            fault_exposure_ns=fault_exposure,
+            fault_recovery_ns=fault_recovery,
+            survived=survived,
         )

@@ -122,6 +122,29 @@ class SwitchLayer:
     def fail_switch(self, sw: int) -> None:
         self.failed[sw] = True
 
+    def crash_switch(self, sw: int) -> None:
+        """Mid-run crash (repro.core.faults): mark failed AND flush the
+        dataplane — descriptor table, slot map and armed timers all vanish
+        with the switch's SRAM. Partials the descriptors were accumulating
+        are state, not packets in flight, so nothing is charged to the drop
+        counters here; the *protocol* recovers the data (timeout at the
+        parent or whole-block retransmission). ``fail_switch`` above is the
+        legacy pre-scheduled form and keeps its flush-free semantics — the
+        ``canary_switch_failure`` golden pins it."""
+        self.failed[sw] = True
+        table = self.tables[sw]
+        if table:
+            for desc in table.values():
+                if desc.timer_seq:
+                    self.live_timers.pop(desc.timer_seq, None)
+            table.clear()
+        self.slots[sw].clear()
+
+    def heal_switch(self, sw: int) -> None:
+        """Recovery: the switch rejoins with empty tables (crash flushed
+        them) and starts admitting descriptors again."""
+        self.failed[sw] = False
+
     # ------------------------------------------------------------- helpers
     # (descriptor high-water tracking is inlined at the two allocation sites
     # in the strategies: ``if len(table) > desc_high[sw]: ...``)
@@ -269,6 +292,12 @@ class AggregationStrategy:
                   7919 * app)
         self._send_cache[app] = consts
         return consts
+
+    def invalidate_send_cache(self, app: int) -> None:
+        """Drop the cached per-app send constants. The fault-escalation path
+        (repro.core.faults) flips ``app`` into ``sim.bypass_apps`` mid-run —
+        the one post-setup event that changes the cached ``degraded`` flag."""
+        self._send_cache.pop(app, None)
 
     def next_host_packet(self, host: int) -> Optional[Packet]:
         """Produce this host's next allreduce send (monolith cursor walk)."""

@@ -31,6 +31,17 @@ from typing import Dict, List, Optional, Type
 from .engine import EV_LINK_ARRIVE_HOST, EV_LINK_ARRIVE_SWITCH
 from .types import Packet, PacketKind, SimConfig
 
+# Dead-link sentinel (repro.core.faults): a downed link is "poisoned" by
+# setting ``busy_until`` to this horizon. Everything falls out of the one
+# representation: backlog-metric LB policies see an effectively infinite
+# queue and route around it, the ECMP/hash fast paths check the already
+# loaded ``busy_until`` against the horizon (one float compare, no extra
+# memory traffic on fault-free runs), and the shared tx helpers turn sends
+# on a poisoned link into charged drops. Finite (not ``inf``) so telemetry
+# backlog series stay plottable. Healing simply rewinds ``busy_until`` to
+# ``now`` — pre-fault backlog was already drained or dropped.
+LINK_DOWN_HORIZON = 1e15
+
 
 class Link:
     """A unidirectional link with serialization, propagation and a FIFO queue.
@@ -164,7 +175,13 @@ class Topology:
                      port: int) -> float:
         eng = sim.engine
         now = eng.now
-        start = link.busy_until if link.busy_until > now else now
+        bu = link.busy_until
+        if bu >= LINK_DOWN_HORIZON:
+            # poisoned by a fault schedule (only ever true when sim.faults
+            # exists): the send is a charged drop, the link stays poisoned
+            sim.faults.on_tx_down(link, pkt, sw)
+            return now + pkt.size_bytes / link.bytes_per_ns
+        start = bu if bu > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
         tp = self._transport
@@ -190,7 +207,11 @@ class Topology:
     def tx_to_host(self, sim, link: Link, pkt: Packet, host: int) -> float:
         eng = sim.engine
         now = eng.now
-        start = link.busy_until if link.busy_until > now else now
+        bu = link.busy_until
+        if bu >= LINK_DOWN_HORIZON:
+            sim.faults.on_tx_down(link, pkt, host)
+            return now + pkt.size_bytes / link.bytes_per_ns
+        start = bu if bu > now else now
         link.busy_until = busy = start + pkt.size_bytes / link.bytes_per_ns
         link.bytes_sent += pkt.size_bytes
         tp = self._transport
@@ -242,6 +263,15 @@ class Topology:
     def static_send_up(self, sim, sw: int, root: int, pkt: Packet) -> None:
         """Forward a fully-aggregated partial one level toward ``root``."""
         raise NotImplementedError
+
+    # --- fault-injection support -------------------------------------------
+    def links_into(self, sw: int) -> List[Link]:
+        """Every link whose far end is switch ``sw`` — what a switch-crash
+        fault poisons so traffic stops being *offered* to a dead switch
+        (packets already in flight still arrive and drop at the failed-switch
+        check). Default: no structural knowledge, nothing to poison — crash
+        faults on a plug-in fabric then only flush descriptors."""
+        return []
 
     # --- accounting ---------------------------------------------------------
     def all_links(self) -> List[Link]:
@@ -302,7 +332,11 @@ def pick_min_backlog(links: List[Link], default: int, now: float,
     before summing, so the golden replays cannot drift.
     """
     if policy == "ecmp":
-        return default
+        if links[default].busy_until < LINK_DOWN_HORIZON:
+            return default
+        # hashed member is dead: fall through to the backlog scan, which
+        # sees the poisoned link as infinite backlog — the ECMP-group-member
+        # removal real switches perform
     link = links[default]
     b = (link.busy_until - now) * link.bytes_per_ns
     best_b = b if b > 0.0 else 0.0
@@ -473,7 +507,9 @@ class ThreeTierFatTree(Topology):
             fkey = (sw,) + self.flowlet_key(pkt)
             cached = self.flowlets.get(fkey)
             if cached is not None:
-                return cached
+                if links[cached].busy_until < LINK_DOWN_HORIZON:
+                    return cached
+                # cached member died mid-run: re-pick and re-pin
             choice = pick_min_backlog(links, default, sim.engine.now, policy,
                                       self._thr, remote)
             self.flowlets[fkey] = choice
@@ -522,6 +558,16 @@ class ThreeTierFatTree(Topology):
             # deterministic hash choice of the destination pod's agg: same
             # block converges on one down-path, maximizing in-path aggregation
             a = self.flow_hash(pkt) % self.A
+            if self.agg_down[dpod * self.A + a][c].busy_until \
+                    >= LINK_DOWN_HORIZON:
+                # hashed agg is dead/unreachable: deterministic walk to the
+                # first live pod agg (same choice for every packet of the
+                # block, so convergence on one down-path is preserved)
+                for alt in range(self.A):
+                    dl = self.agg_down[dpod * self.A + (a + alt) % self.A][c]
+                    if dl.busy_until < LINK_DOWN_HORIZON:
+                        a = (a + alt) % self.A
+                        break
             self._send_core_to_agg(sim, c, dpod * self.A + a, pkt)
 
     def forward_toward_switch(self, sim, sw: int, pkt: Packet) -> None:
@@ -608,6 +654,22 @@ class ThreeTierFatTree(Topology):
         else:
             self._send_agg_to_core(sim, self.agg_local(sw),
                                    self.core_local(root), pkt)
+
+    # ---- fault-injection support -------------------------------------------
+    def links_into(self, sw: int) -> List[Link]:
+        if self.is_leaf(sw):
+            return ([self.host_up[h]
+                     for h in range(sw * self.H, (sw + 1) * self.H)]
+                    + [self.leaf_down[sw][a] for a in range(self.A)])
+        if self.is_agg(sw):
+            agg_l = self.agg_local(sw)
+            pod, a = agg_l // self.A, agg_l % self.A
+            first = pod * self.leaves_per_pod
+            return ([self.leaf_up[leaf][a]
+                     for leaf in range(first, first + self.leaves_per_pod)]
+                    + [self.agg_down[agg_l][c] for c in range(self.C)])
+        c = self.core_local(sw)
+        return [self.agg_up[g][c] for g in range(self.num_aggs)]
 
     # ---- accounting --------------------------------------------------------
     def all_links(self) -> List[Link]:

@@ -350,6 +350,15 @@ class SimConfig:
     # worthless individually in a trace view (the exact totals live in
     # ``SimResult``) but dominate the telemetry-on overhead if all retained.
     telemetry_max_pkt_instants: int = 2_000
+    # Opt-in fault injection (repro.core.faults): a list of FLAT, JSON-able
+    # spec dicts (so sweep work items survive the asdict -> SimConfig(**cfg)
+    # round trip), each naming a registered fault kind plus its parameters,
+    # e.g. ``{"kind": "switch_crash", "target": 5, "at_ns": 2000.0,
+    # "heal_ns": 50000.0}``. Empty means ``Simulator.faults is None`` and
+    # every hook site reduces to one identity check — fault-free runs
+    # (including every golden) stay bit-identical. Kinds: "switch_crash",
+    # "link_down", "link_degrade", "link_flap", "host_slow".
+    faults: List[dict] = field(default_factory=list)
 
     # Derived ------------------------------------------------------------------
     @property
@@ -564,6 +573,18 @@ class SimResult:
     # ``dataclasses.asdict`` round trip sweep work items rely on. Empty when
     # telemetry is off.
     telemetry_summary: Dict[str, float] = field(default_factory=dict)
+    # -- fault injection (repro.core.faults) ----------------------------------
+    # Additive survivability diagnostics, empty when no fault schedule ran.
+    # ``fault_events`` logs every injected fault/heal as a flat dict
+    # (kind, target, t_ns, phase). ``fault_exposure_ns`` measures, per app,
+    # how much of its [start, finish] window overlapped an active fault;
+    # ``fault_recovery_ns`` is the tail the app needed after the last
+    # overlapping heal (0 when it finished before the heal, or was never
+    # exposed). ``survived`` records whether each app completed at all.
+    fault_events: List[dict] = field(default_factory=list)
+    fault_exposure_ns: Dict[int, float] = field(default_factory=dict)
+    fault_recovery_ns: Dict[int, float] = field(default_factory=dict)
+    survived: Dict[int, bool] = field(default_factory=dict)
 
     def jct_ns(self, app: int) -> float:
         """Job completion time: finish minus submit (includes deferral wait)."""

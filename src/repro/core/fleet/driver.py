@@ -74,6 +74,14 @@ class FleetResult:
     # scenario's cfg enabled telemetry — a tenant's p99 traced to causes
     # and to the fabric links responsible (ARCHITECTURE.md §Diagnosis)
     diagnosis: Optional[object] = None
+    # survivability aggregates (repro.core.faults), trivial without a fault
+    # schedule (survival_rate 1.0, zero recovery): fraction of jobs that
+    # completed, mean/max post-heal recovery tails, and the injected
+    # fault/heal event log from the underlying ``SimResult``
+    survival_rate: float = 1.0
+    mean_recovery_ns: float = 0.0
+    max_recovery_ns: float = 0.0
+    fault_events: List[dict] = field(default_factory=list)
 
     @property
     def correct(self) -> bool:
@@ -180,6 +188,15 @@ class FleetDriver:
             tenant_series=(tenant_remaining_series(sim, s.jobs)
                            if sim.telemetry is not None else {}),
             diagnosis=diag,
+            survival_rate=(sum(result.survived.values())
+                           / len(result.survived)
+                           if result.survived else 1.0),
+            mean_recovery_ns=(statistics.mean(result.fault_recovery_ns
+                                              .values())
+                              if result.fault_recovery_ns else 0.0),
+            max_recovery_ns=(max(result.fault_recovery_ns.values())
+                             if result.fault_recovery_ns else 0.0),
+            fault_events=list(result.fault_events),
         )
 
 

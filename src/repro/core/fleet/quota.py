@@ -170,6 +170,24 @@ class AdmissionController:
             # exactly one slot freed -> retry exactly one deferred job
             sim._activate_job(queue.pop(0))
 
+    def release(self, sim, app: int) -> None:
+        """Free a still-running app's quota slot mid-run (repro.core.faults):
+        when a fault escalates ``app`` to the host-based fallback it stops
+        consuming switch memory, so its slot can re-admit one deferred job
+        immediately instead of waiting for the degraded app to finish.
+        ``on_job_done`` later finds the slot already released and no-ops."""
+        if self.policy == "none":
+            return
+        tenant = sim.tenant_of.get(app, app)
+        running = self.running.get(tenant)
+        if running is None or app not in running:
+            return
+        running.discard(app)
+        sim.slot_regions.pop(app, None)
+        queue = self.deferred.get(tenant)
+        if queue:
+            sim._activate_job(queue.pop(0))
+
     # ------------------------------------------------------------ inspection
     def degraded_apps(self) -> Set[int]:
         return {a for a, d in self.decisions.items() if d == DEGRADE}

@@ -118,6 +118,13 @@ def lower_item(item: dict) -> FlowCell:
         raise ValueError(
             "the flow backend cannot record telemetry; "
             "use backend='packet' for telemetry runs")
+    if cfg.faults:
+        # no event stream exists to inject EV_FAULT/EV_HEAL into, and the
+        # closed-form solver has no notion of a mid-run topology change —
+        # silently dropping the schedule would fake survivability results
+        raise ValueError(
+            "the flow backend cannot model fault injection; "
+            "use backend='packet' for fault-schedule experiments")
     if "lb" in item:
         cfg = dataclasses.replace(cfg, lb=item["lb"])
     algo = item["algo"]

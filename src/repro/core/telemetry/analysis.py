@@ -241,6 +241,7 @@ class RunView:
         self._blocks: Optional[List[BlockRecord]] = None
         self._desc: Optional[Dict[Tuple[int, int], List[DescWindow]]] = None
         self._pfc: Optional[Intervals] = None
+        self._fault_iv: Optional[Intervals] = None
         self._congested: Optional[Intervals] = None
         self._app_congested: Dict[Tuple[int, ...], Intervals] = {}
         self._pacing: Dict[Tuple[int, ...], Intervals] = {}
@@ -444,6 +445,31 @@ class RunView:
         spans.extend((t0, t_end) for t0 in open_at.values())
         self._pfc = Intervals(spans)
         return self._pfc
+
+    def fault_intervals(self) -> Intervals:
+        """Union of fault-active windows (repro.core.faults): a "fault"
+        instant with ``active`` True opens a window keyed by (kind, target),
+        its heal (``active`` False) closes it; an unhealed fault extends to
+        the end of the run."""
+        if self._fault_iv is not None:
+            return self._fault_iv
+        open_at: Dict[Tuple[str, object], float] = {}
+        spans: List[Tuple[float, float]] = []
+        t_end = self.t_end
+        for s in self.instants:
+            if s[0] != "fault":
+                continue
+            _, kind, target, active, t = s
+            key = (str(kind), target)
+            if active:
+                open_at.setdefault(key, float(t))
+            else:
+                t0 = open_at.pop(key, None)
+                if t0 is not None:
+                    spans.append((t0, float(t)))
+        spans.extend((t0, t_end) for t0 in open_at.values())
+        self._fault_iv = Intervals(spans)
+        return self._fault_iv
 
     def pacing_intervals(self, hosts: Sequence[int]) -> Intervals:
         """Union of the windows during which any of ``hosts`` was DCQCN-paced

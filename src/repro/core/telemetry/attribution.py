@@ -8,6 +8,11 @@ is partitioned along its own time axis into a **closed taxonomy of causes**:
 ``bcast_tail``            leader-done -> last-participant completion
                           broadcast (the block is reduced, hosts are still
                           learning about it)
+``fault_recovery``        injected-fault windows (repro.core.faults): block
+                          time spent while a switch crash, link failure or
+                          host straggler fault was active — the most
+                          specific evidence, claimed before the congestion
+                          symptoms the fault also produces
 ``pfc_pause``             fabric-wide PFC pause windows (transport=dcqcn
                           with PFC enabled)
 ``retx_recovery``         loss-recovery windows: block-level retx requests
@@ -88,8 +93,9 @@ __all__ = ["CAUSES", "CONSERVATION_REL_TOL", "BlockAttribution",
 
 # the closed taxonomy, in attribution priority order (most specific first);
 # report output preserves this order for stable diffs
-CAUSES = ("bcast_tail", "pfc_pause", "retx_recovery", "collision_bypass",
-          "dcqcn_pacing", "queueing", "timeout_flush", "wire", "other")
+CAUSES = ("bcast_tail", "fault_recovery", "pfc_pause", "retx_recovery",
+          "collision_bypass", "dcqcn_pacing", "queueing", "timeout_flush",
+          "wire", "other")
 
 # conservation tolerance: float rounding across interval subtraction only —
 # sum(causes) is structurally <= span, and `other` absorbs the remainder,
@@ -195,11 +201,19 @@ def attribute_block(view: RunView, blk: BlockRecord) -> BlockAttribution:
         causes["bcast_tail"] = t1 - blk.bcast_t0
         remaining = Intervals([(t0, blk.bcast_t0)])
 
-    # 2. PFC pause windows (fabric-wide union: a paused sender stalls the
+    # 2. fault-active windows (repro.core.faults): a crashed switch, dead
+    #    link or paused host is the most specific possible evidence — any
+    #    block time spent inside one is fault recovery, whatever congestion
+    #    symptoms it also produced
+    fault_iv = view.fault_intervals()
+    if not fault_iv.is_empty():
+        remaining = _take(remaining, fault_iv, causes, "fault_recovery")
+
+    # 3. PFC pause windows (fabric-wide union: a paused sender stalls the
     #    reduction tree feeding it, so any overlap is attributable)
     remaining = _take(remaining, view.pfc_intervals(), causes, "pfc_pause")
 
-    # 3. loss-recovery windows: each recovery instant at time t implies the
+    # 4. loss-recovery windows: each recovery instant at time t implies the
     #    preceding timeout window [t - timeout, t] was spent waiting
     parts = set(view.participants(blk.app))
     ivs: List[Tuple[float, float]] = []
@@ -211,7 +225,7 @@ def attribute_block(view: RunView, blk: BlockRecord) -> BlockAttribution:
     if ivs:
         remaining = _take(remaining, Intervals(ivs), causes, "retx_recovery")
 
-    # 4. collision detours. The leader host-aggregates bypassed
+    # 5. collision detours. The leader host-aggregates bypassed
     #    contributions serially, so the detour windows chain: each starts
     #    when its collision fired or when the previous detour finished,
     #    whichever is later. While collisions are on record for this block,
@@ -232,18 +246,18 @@ def attribute_block(view: RunView, blk: BlockRecord) -> BlockAttribution:
         remaining = _take(remaining, Intervals(ivs), causes,
                           "collision_bypass")
 
-    # 5. DCQCN pacing: windows with any participant below line rate
+    # 6. DCQCN pacing: windows with any participant below line rate
     if parts:
         pace = view.pacing_intervals(sorted(parts))
         if not pace.is_empty():
             remaining = _take(remaining, pace, causes, "dcqcn_pacing")
 
-    # 6. queueing: remaining time while a link that can carry this app's
+    # 7. queueing: remaining time while a link that can carry this app's
     #    traffic held > 1 MTU of backlog (bystander host links excluded)
     remaining = _take(remaining, view.app_congested_intervals(sorted(parts)),
                       causes, "queueing")
 
-    # 7. timeout-flush stalls: the waited-out tail of each timeout window
+    # 8. timeout-flush stalls: the waited-out tail of each timeout window
     #    (only what pacing/queueing above did not already claim — an idle
     #    switch waiting out its window on an uncongested fabric)
     ivs = [(max(w.t0, w.t1 - view.timeout_ns), w.t1)
@@ -252,7 +266,7 @@ def attribute_block(view: RunView, blk: BlockRecord) -> BlockAttribution:
     if ivs:
         remaining = _take(remaining, Intervals(ivs), causes, "timeout_flush")
 
-    # 8. wire floor, capped at the topology estimate; the rest is residual
+    # 9. wire floor, capped at the topology estimate; the rest is residual
     rest = remaining.measure()
     wire = min(rest, view.wire_estimate_ns)
     causes["wire"] = wire

@@ -610,6 +610,16 @@ class Telemetry:
         if self._spans_on:
             self._push_instant(("drop", cause, where, self._engine.now))
 
+    def on_fault(self, kind: str, target, active: bool) -> None:
+        """A fault-injection edge (repro.core.faults): ``active`` True when
+        the fault lands, False at its heal. The instant pairs become
+        ``RunView.fault_intervals()`` and the ``fault_recovery`` attribution
+        cause."""
+        self._registry.inc("faults/" + kind)
+        if self._spans_on:
+            self._push_instant(("fault", kind, target, active,
+                                self._engine.now))
+
     def on_retx(self, what: str, host: int, app: int, block: int) -> None:
         """Whole-block recovery traffic: ``what`` is "request" (a host asked
         its leader) or "fail" (the leader re-issued the reduction)."""

